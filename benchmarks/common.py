@@ -1,0 +1,55 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.net import LinkKind, big_switch, fat_tree
+from repro.streams import (
+    compile_sim,
+    parallelize,
+    round_robin,
+    simulate,
+    trending_topics,
+    trucking_iot,
+)
+
+CAPS = {"10Mbps": 1.25, "15Mbps": 1.875, "20Mbps": 2.5}
+SECONDS = 600.0
+DT = 0.5
+
+
+def run_pair(app_fn, topo, seconds=SECONDS, seed=0, **sim_kw):
+    """Run TCP vs App-aware on one app/topology; returns (tcp, appaware)."""
+    g = parallelize(app_fn(), seed=seed)
+    sim = compile_sim(g, topo, round_robin(g, topo.n_machines))
+    tcp = simulate(sim, "tcp", seconds=seconds, dt=DT, **sim_kw)
+    aa = simulate(sim, "appaware", seconds=seconds, dt=DT, **sim_kw)
+    return tcp, aa
+
+
+def singlehop_topo(cap: float):
+    """10-machine cluster, 8 workers, bottleneck at machine up/downlinks."""
+    return big_switch(8, cap)
+
+
+def multihop_topo(cap: float):
+    """Fat-tree testbed (Fig. 2) with throttled internal links (§VI-A.1)."""
+    return fat_tree(up=12.5).set_capacity(LinkKind.INTERNAL, cap)
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """CSV to stdout: name,us_per_call,derived-metrics..."""
+    for r in rows:
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{r.get('name', name)},{r.get('us_per_call', 0):.2f},{derived}")
+
+
+def timeit_us(fn, iters: int = 10) -> float:
+    fn()  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        fn()
+    return (time.time() - t0) / iters * 1e6

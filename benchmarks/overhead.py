@@ -1,0 +1,64 @@
+"""§VI-D: optimizer/enforcer overhead. Paper: ~6 ms per allocation on their
+testbed scale; controller→switch updates 0.1–10 ms. We time (a) the full
+Alg. 1 allocation on the paper-scale problem, (b) the batched Pallas
+waterfill at datacenter scale (10⁴ links), (c) the TCP max-min baseline."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit_us
+from repro.core import FlowState, OnlineAllocator, maxmin_rates
+from repro.kernels.waterfill.ops import waterfill
+from repro.net import fat_tree
+from repro.streams import compile_sim, parallelize, round_robin, trending_topics
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # (a) paper-scale: TT app on the fat-tree testbed
+    g = parallelize(trending_topics(), seed=0)
+    topo = fat_tree()
+    flows = g.flow_pairs(round_robin(g, topo.n_machines))
+    alloc = OnlineAllocator.from_topology(topo, flows)
+    F = len(flows)
+    st = FlowState(*[jnp.asarray(rng.uniform(0, 10, F), jnp.float32)
+                     for _ in range(5)])
+    us = timeit_us(lambda: jax.block_until_ready(alloc(st)))
+    rows.append({"name": "overhead_alg1_paper_scale", "us_per_call": us,
+                 "flows": F, "links": topo.n_links,
+                 "paper_ms": 6.0, "ours_ms": round(us / 1e3, 3)})
+
+    # (b) datacenter scale: 8192 links × 256 flows each, Pallas kernel
+    L, Fk = 8192, 256
+    w = jnp.asarray(rng.uniform(0, 20, (L, Fk)), jnp.float32)
+    bl = jnp.asarray(rng.uniform(0, 30, (L, Fk)), jnp.float32)
+    rho = jnp.asarray(rng.uniform(0.1, 10, (L, Fk)), jnp.float32)
+    mask = jnp.asarray(rng.random((L, Fk)) < 0.5, jnp.float32)
+    cap = jnp.asarray(rng.uniform(1, 50, L), jnp.float32)
+    kind = jnp.asarray(rng.integers(0, 2, L), jnp.int32)
+    us = timeit_us(
+        lambda: jax.block_until_ready(
+            waterfill(w, bl, rho, mask, cap, kind)), iters=3)
+    rows.append({"name": "overhead_waterfill_kernel_8192x256",
+                 "us_per_call": us,
+                 "links": L, "flows_per_link": Fk,
+                 "note": "interpret-mode on CPU; TPU compiled is the target"})
+
+    # (c) TCP max-min on the same paper-scale problem
+    R = jnp.asarray(topo.routing_matrix(flows), jnp.float32)
+    caps = jnp.asarray(topo.capacities, jnp.float32)
+    us = timeit_us(lambda: jax.block_until_ready(maxmin_rates(R, caps)))
+    rows.append({"name": "overhead_tcp_maxmin", "us_per_call": us})
+    return rows
+
+
+def main() -> None:
+    emit(run(), "overhead")
+
+
+if __name__ == "__main__":
+    main()

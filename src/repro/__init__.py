@@ -1,0 +1,5 @@
+"""repro: 'On SDN-Enabled Online and Dynamic Bandwidth Allocation for
+Stream Analytics' (Aljoby et al., ICNP'18/JSAC'19) as a production-grade
+multi-pod JAX/TPU framework. See DESIGN.md."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,21 @@
+# The paper's primary contribution: application-aware, online, dynamic
+# bandwidth allocation (Alg. 1 + §VII multi-app fairness), as composable
+# JAX modules. Substrates live in sibling subpackages (net/, streams/,
+# models/, train/, serve/, kernels/).
+from repro.core.flowstate import FlowState, zeros as flowstate_zeros  # noqa: F401
+from repro.core.allocator import (  # noqa: F401
+    LinkProgram,
+    OnlineAllocator,
+    allocate,
+    backfill,
+    solve_downlink,
+    solve_uplink,
+)
+from repro.core.tcp import demand_limited_maxmin, maxmin_rates  # noqa: F401
+from repro.core.multiapp import (  # noqa: F401
+    AppFairScheduler,
+    ewma_throughput,
+    group_by_throughput,
+    jain_index,
+    strict_priority_alloc,
+)

@@ -1,0 +1,52 @@
+"""Flow-state model (paper Fig. 5).
+
+Per flow ``f`` and measurement interval ``(t, t+dt)`` the profiler reports the
+5-metric tuple
+
+    ⟨ L_f^s(t),  L_f^r(t),  V_f(t,t+dt),  L_f^s(t+dt),  L_f^r(t+dt) ⟩
+
+where ``L^s`` is the *sender* queue backlog (MB of tuples awaiting transfer —
+fork side), ``L^r`` the *receiver* queue backlog (MB received but not yet
+processed — join side) and ``V`` the bytes actually transferred. The state is
+non-clairvoyant: it needs no knowledge of the (unbounded) flow volume.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class FlowState(NamedTuple):
+    """Arrays of shape [F] (MB / MB units). ``dt`` in seconds."""
+
+    ls_t: jnp.ndarray    # L_f^s(t)       sender backlog at interval start
+    lr_t: jnp.ndarray    # L_f^r(t)       receiver backlog at interval start
+    v: jnp.ndarray       # V_f(t, t+dt)   bytes transferred in the interval
+    ls_t1: jnp.ndarray   # L_f^s(t+dt)    sender backlog at interval end
+    lr_t1: jnp.ndarray   # L_f^r(t+dt)    receiver backlog at interval end
+
+    # ---- derived quantities used by Alg. 1 ---------------------------
+    def uplink_demand(self) -> jnp.ndarray:
+        """Predicted next-interval transfer demand w_f (numerator of eq. 3).
+
+        Data generated in (t, t+dt) is V + (L^s(t+dt) − L^s(t)); if the
+        generation rate holds, V + 2·L^s(t+dt) − L^s(t) must be moved in the
+        next interval (paper §IV-B derivation).
+        """
+        return jnp.maximum(self.v + 2.0 * self.ls_t1 - self.ls_t, 0.0)
+
+    def drain_rate(self, dt: float, eps: float = 1e-9) -> jnp.ndarray:
+        """Receiver processing rate ρ_f (denominator of eq. 4):
+        data processed in the interval = V − (L^r(t+dt) − L^r(t)), per second.
+        """
+        return jnp.maximum((self.v - self.lr_t1 + self.lr_t) / dt, eps)
+
+    def any_backlog(self) -> jnp.ndarray:
+        """Alg. 1 line 31 loop condition: some flow still has backlog."""
+        return jnp.any((self.ls_t1 > 0.0) | (self.lr_t1 > 0.0))
+
+
+def zeros(n_flows: int) -> FlowState:
+    z = jnp.zeros((n_flows,), dtype=jnp.float32)
+    return FlowState(z, z, z, z, z)

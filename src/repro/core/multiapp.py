@@ -1,0 +1,121 @@
+"""Multi-application bandwidth sharing & application-level fairness (§VII).
+
+TCP's flow-level fairness hands an app with many flows a proportionally large
+slice of each bottleneck. The paper's `App-Fair` point solution:
+
+  * track per-app throughput with the EWMA of eq. (5):
+        μ_i(t+Δt) = α μ_i(t) + (1−α) μ_i(Δt)
+  * cluster apps by μ into priority groups (lowest throughput → highest
+    priority), at most ``m`` groups (m = 8 queues in the paper's switches);
+  * strict-priority allocation: fill group by group with max-min inside a
+    group; displacement between groups every interval avoids starvation;
+  * measured with the Jain fairness index (paper: 0.98–0.99 vs TCP 0.84).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tcp import maxmin_rates
+
+_EPS = 1e-9
+
+
+def ewma_throughput(mu_t, mu_dt, alpha: float):
+    """Eq. (5)."""
+    return alpha * mu_t + (1.0 - alpha) * mu_dt
+
+
+def jain_index(x: jnp.ndarray) -> jnp.ndarray:
+    """Jain, Chiu & Hawe fairness index: (Σx)² / (n Σx²) ∈ (0, 1]."""
+    n = x.shape[0]
+    return jnp.sum(x) ** 2 / jnp.maximum(n * jnp.sum(x * x), _EPS)
+
+
+def group_by_throughput(mu: jnp.ndarray, n_groups: int) -> jnp.ndarray:
+    """'Simple clustering': rank apps by EWMA throughput and split into
+    ``n_groups`` quantile buckets. Returns priority per app — 0 is HIGHEST
+    (lowest achieved throughput), as in the paper."""
+    n_apps = mu.shape[0]
+    rank = jnp.argsort(jnp.argsort(mu))          # 0 = lowest throughput
+    per = -(-n_apps // n_groups)                 # ceil
+    return jnp.minimum(rank // per, n_groups - 1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups",))
+def strict_priority_alloc(
+    R: jnp.ndarray,            # [F, L]
+    capacity: jnp.ndarray,     # [L]
+    app_of_flow: jnp.ndarray,  # [F] int app ids
+    app_priority: jnp.ndarray, # [A] 0 = highest
+    n_groups: int = 8,
+) -> jnp.ndarray:
+    """Multi-level strict-priority scheduler: per priority level (high→low)
+    run max-min among that level's flows on the residual capacity."""
+    F, L = R.shape
+    prio_of_flow = app_priority[app_of_flow]
+    x = jnp.zeros((F,), R.dtype)
+
+    def level(p, x):
+        used = jnp.sum(R * x[:, None], axis=0)
+        resid = jnp.maximum(capacity - used, 0.0)
+        sel = (prio_of_flow == p).astype(R.dtype)
+        rates = maxmin_rates(R, resid, sel)
+        rates = jnp.where(jnp.isfinite(rates), rates, 0.0)
+        return x + rates * sel
+
+    return jax.lax.fori_loop(0, n_groups, level, x)
+
+
+class AppFairState(NamedTuple):
+    total: jnp.ndarray     # [A] cumulative throughput per app
+    n: jnp.ndarray         # [] intervals observed
+    priority: jnp.ndarray  # [A]
+
+
+class AppFairScheduler:
+    """§VII App-Fair: blend the cumulative average μ(t) ('achieved average
+    throughput up to time t') with the recent interval μ(Δt) via eq. (5),
+    regroup every interval (displacement), allocate with strict priority."""
+
+    def __init__(self, n_apps: int, alpha: float = 0.5, n_groups: int = 8):
+        self.alpha = float(alpha)
+        self.n_groups = int(n_groups)
+        self.n_apps = int(n_apps)
+
+    def init(self) -> AppFairState:
+        return AppFairState(
+            total=jnp.zeros((self.n_apps,), jnp.float32),
+            n=jnp.zeros((), jnp.float32),
+            priority=jnp.zeros((self.n_apps,), jnp.int32),
+        )
+
+    def step(
+        self,
+        state: AppFairState,
+        mu_interval: jnp.ndarray,   # [A] throughput achieved this Δt
+        R: jnp.ndarray,
+        capacity: jnp.ndarray,
+        app_of_flow: jnp.ndarray,
+    ) -> tuple[AppFairState, jnp.ndarray]:
+        total = state.total + mu_interval
+        n = state.n + 1.0
+        mu_hist = total / jnp.maximum(n, 1.0)  # μ(t): running average
+        mu = ewma_throughput(mu_hist, mu_interval, self.alpha)
+        # displacement: regrouping *every interval* moves apps between groups,
+        # guaranteeing no app is starved indefinitely (paper §VII).
+        prio = group_by_throughput(mu, self.n_groups)
+        x = strict_priority_alloc(
+            R, capacity, app_of_flow, prio, n_groups=self.n_groups
+        )
+        return AppFairState(total=total, n=n, priority=prio), x
+
+
+def tcp_app_throughput(R, capacity, app_of_flow, n_apps: int):
+    """Baseline for Fig. 13: per-app aggregate of flow-level max-min rates."""
+    x = maxmin_rates(R, capacity)
+    x = jnp.where(jnp.isfinite(x), x, 0.0)
+    return jax.ops.segment_sum(x, app_of_flow, num_segments=n_apps)

@@ -1,0 +1,144 @@
+"""Cross-layer collective-flow scheduler — the paper's technique applied to
+the training fabric (DESIGN.md §2).
+
+The paper allocates link bandwidth among a stream app's flows using
+application-layer flow state. Here the "application" is the training step:
+flows are the compiled program's collectives (DP reduce-scatters, TP
+all-gathers, EP all-to-alls, DCN pod syncs), links are mesh-axis fabrics,
+and flow state comes from the step's dataflow (gradient buckets *fork* onto
+the DP axis as they become ready back-to-front; EP combines *join* on
+expert outputs). There is no OpenFlow meter on a TPU — the allocator's rate
+vector is enforced by *schedule shaping*: issue order, chunking, and
+overlap windows for bucketed collectives.
+
+Used by: launch-time analysis (examples/comm_schedule.py), the overlap
+planner in §Perf, and the multi-job simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocator import OnlineAllocator
+from repro.core.flowstate import FlowState
+from repro.launch import hlo_stats
+from repro.net.topology import LinkKind
+
+
+@dataclasses.dataclass
+class CollectiveFlow:
+    name: str
+    kind: str            # all-reduce | all-gather | ...
+    bytes: float         # per-shard operand bytes
+    axis: str            # mesh axis whose links it rides ("data"/"model"/"pod")
+    phase: str = "grad"  # grad | weight | activation
+
+
+_AXIS_BW_GBPS = {"model": 50.0, "data": 50.0, "pod": 6.25}
+
+
+def extract_flows(hlo_text: str, mesh_axes: dict[str, int]) -> list[CollectiveFlow]:
+    """Pull collective ops out of compiled HLO and attribute each to a mesh
+    axis via its replica-group shape: contiguous groups (``<=[N]``) ride the
+    minor (last) axis; strided groups (``T(...)``) ride a major axis."""
+    flows: list[CollectiveFlow] = []
+    axes = list(mesh_axes)
+    for line in hlo_text.splitlines():
+        m = hlo_stats._LINE_RE.search(line)
+        if not m or m.group("variant") == "-done":
+            continue
+        kind = m.group("kind")
+        rbytes = sum(hlo_stats.shape_bytes(d, s)
+                     for d, s in hlo_stats._SHAPE_RE.findall(m.group("result")))
+        g = hlo_stats._GROUPS_RE.search(line)
+        gsize = int(g.group(2)) if g else 1
+        if kind == "all-gather":
+            rbytes //= max(gsize, 1)
+        elif kind == "reduce-scatter":
+            rbytes *= gsize
+        # axis attribution
+        strided = "T(" in line
+        cands = [a for a in axes if mesh_axes[a] == gsize]
+        if not cands:
+            axis = axes[-1]
+        elif len(cands) == 1:
+            axis = cands[0]
+        else:
+            axis = cands[0] if strided else cands[-1]
+        phase = ("grad" if "transpose" in line or "add" in line else
+                 "activation")
+        name_m = re.match(r"\s*%?([\w.\-]+)", line)
+        flows.append(CollectiveFlow(
+            name=name_m.group(1) if name_m else kind,
+            kind=kind, bytes=float(rbytes), axis=axis, phase=phase))
+    return flows
+
+
+@dataclasses.dataclass
+class CommSchedule:
+    order: list[int]          # flow indices, highest urgency first
+    rates: np.ndarray         # allocated share of axis bandwidth [F]
+    chunks: list[int]         # chunk count per flow (overlap granularity)
+    est_exposed_s: float      # comm time NOT hidden behind compute
+    est_total_comm_s: float
+
+
+def plan_schedule(
+    flows: list[CollectiveFlow],
+    mesh_axes: dict[str, int],
+    step_compute_s: float,
+    backlog_bytes: np.ndarray | None = None,
+    min_chunk_bytes: float = 4e6,
+) -> CommSchedule:
+    """Run the paper's allocator over the collective flows.
+
+    Each mesh axis is a link pair (fork onto the axis = uplink; join from
+    the axis = downlink). Flow state: sender backlog = bytes ready to ship
+    (gradient buckets accumulate back-to-front), receiver drain = the
+    consumer's compute rate. The eq.(3)/(4) solves yield bandwidth shares;
+    chunking spreads each flow across the overlap window ∝ its share.
+    """
+    F = len(flows)
+    if F == 0:
+        return CommSchedule([], np.zeros(0), [], 0.0, 0.0)
+    axes = list(mesh_axes)
+    L = len(axes)
+    R = np.zeros((F, L))
+    for i, f in enumerate(flows):
+        R[i, axes.index(f.axis)] = 1.0
+    caps = np.array([_AXIS_BW_GBPS[a] * 1e9 if a in _AXIS_BW_GBPS else 50e9
+                     for a in axes])
+    kinds = np.array([int(LinkKind.UPLINK)] * L)
+
+    mb = np.array([f.bytes for f in flows])
+    backlog = mb if backlog_bytes is None else backlog_bytes
+    alloc = OnlineAllocator(R, caps, kinds, dt=max(step_compute_s, 1e-3))
+    state = FlowState(
+        ls_t=jnp.zeros(F), lr_t=jnp.zeros(F),
+        v=jnp.asarray(mb, jnp.float32),
+        ls_t1=jnp.asarray(backlog, jnp.float32),
+        lr_t1=jnp.zeros(F),
+    )
+    rates = np.asarray(alloc(state))
+    # urgency order: shortest remaining-transfer-time first (paper's min-max
+    # objective ranks flows by w_f/x_f equalization — ties → largest first)
+    ttime = backlog / np.maximum(rates, 1e-9)
+    order = list(np.argsort(-ttime))
+    chunks = [max(1, int(np.ceil(f.bytes / min_chunk_bytes))) for f in flows]
+
+    per_axis_bytes = {a: sum(f.bytes for f in flows if f.axis == a)
+                      for a in axes}
+    comm_s = sum(b / (_AXIS_BW_GBPS[a] * 1e9)
+                 for a, b in per_axis_bytes.items() if a in _AXIS_BW_GBPS)
+    # overlap model: chunked flows hide behind compute except the last chunk
+    # per axis + any comm beyond the compute window
+    hidden = min(step_compute_s, comm_s)
+    exposed = comm_s - hidden + sum(
+        min_chunk_bytes / (_AXIS_BW_GBPS[f.axis] * 1e9)
+        for f in flows if f.axis in _AXIS_BW_GBPS) / max(F, 1)
+    return CommSchedule(order=order, rates=rates, chunks=chunks,
+                        est_exposed_s=float(exposed),
+                        est_total_comm_s=float(comm_s))

@@ -1,0 +1,80 @@
+"""TCP baseline: per-flow max-min fair *rate* allocation (paper §VI-A.3).
+
+The paper's baseline is the default transport of Storm/Heron/Flink — TCP
+congestion control, which (idealized) converges to max-min fair rates among
+flows sharing bottleneck links. We implement exact max-min via progressive
+filling on the routing matrix: repeatedly find the tightest link, freeze its
+flows at the fair share, remove the link, repeat. Runs in ≤ L iterations;
+implemented with `lax.fori_loop` so it jits and batches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-9
+_INF = jnp.inf
+
+
+@functools.partial(jax.jit, static_argnames=())
+def maxmin_rates(R: jnp.ndarray, capacity: jnp.ndarray,
+                 active: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Exact max-min fair rates.
+
+    R: [F, L] binary routing; capacity: [L]; active: [F] mask (default all).
+    Flows traversing no link get rate +inf (caller clamps to demand).
+    """
+    F, L = R.shape
+    if active is None:
+        active = jnp.ones((F,), R.dtype)
+    active = active.astype(R.dtype)
+    on_net = (jnp.sum(R, axis=1) > 0) & (active > 0)
+
+    def body(_, carry):
+        x, frozen, link_done = carry
+        unfrozen = (~frozen) & on_net
+        n_l = jnp.sum(R * unfrozen[:, None].astype(R.dtype), axis=0)      # [L]
+        used = jnp.sum(R * (x * frozen.astype(R.dtype))[:, None], axis=0)  # [L]
+        resid = jnp.maximum(capacity - used, 0.0)
+        fair = jnp.where((n_l > 0) & (~link_done), resid / jnp.maximum(n_l, 1.0), _INF)
+        l_star = jnp.argmin(fair)
+        share = fair[l_star]
+        any_left = jnp.isfinite(share)
+        hit = (R[:, l_star] > 0) & unfrozen & any_left
+        x = jnp.where(hit, share, x)
+        frozen = frozen | hit
+        link_done = link_done.at[l_star].set(link_done[l_star] | any_left)
+        return x, frozen, link_done
+
+    x0 = jnp.zeros((F,), R.dtype)
+    frozen0 = jnp.zeros((F,), bool)
+    done0 = jnp.zeros((L,), bool)
+    x, frozen, _ = jax.lax.fori_loop(0, L, body, (x0, frozen0, done0))
+    # flows not on any congested link (or off-net): unconstrained
+    x = jnp.where(on_net & ~frozen, _INF, x)
+    x = jnp.where(on_net, x, jnp.where(active > 0, _INF, 0.0))
+    return x
+
+
+def demand_limited_maxmin(R, capacity, demand, iters: int = 4):
+    """Max-min with per-flow demand caps (flows never take more than they can
+    send). Iterative: clamp to demand, re-run max-min on residual capacity for
+    still-hungry flows — converges quickly for our scenarios."""
+    F = R.shape[0]
+    x = jnp.zeros((F,), R.dtype)
+    satisfied = jnp.zeros((F,), bool)
+
+    def body(_, carry):
+        x, satisfied = carry
+        used = jnp.sum(R * x[:, None] * satisfied[:, None].astype(R.dtype), axis=0)
+        resid = jnp.maximum(capacity - used, 0.0)
+        mm = maxmin_rates(R, resid, (~satisfied).astype(R.dtype))
+        newly = (~satisfied) & (mm >= demand)
+        x = jnp.where(newly, demand, jnp.where(~satisfied, jnp.minimum(mm, demand), x))
+        satisfied = satisfied | newly
+        return x, satisfied
+
+    x, _ = jax.lax.fori_loop(0, iters, body, (x, satisfied))
+    return jnp.where(jnp.isfinite(x), x, demand)

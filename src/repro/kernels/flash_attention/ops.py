@@ -1,0 +1,31 @@
+"""Jitted wrapper for flash attention: layout adaptation + backend select.
+
+Model code uses [B,S,H,hd] activations; the kernel wants [B,H,S,hd].
+On CPU runs interpret mode (validated vs ref); on TPU runs compiled.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """q: [B,S,H,hd]; k,v: [B,T,K,hd] -> [B,S,H,hd]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_pallas(qt, kt, vt, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+def flash_attention_reference(q, k, v, causal: bool = True):
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    return attention_ref(qt, kt, vt, causal).transpose(0, 2, 1, 3)

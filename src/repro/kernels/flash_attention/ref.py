@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention (GQA, optional causal)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: [B,H,S,hd]; k,v: [B,K,T,hd]; H = K·G. -> [B,H,S,hd] (f32 softmax)."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    q = q.reshape(B, K, G, S, hd)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        T = k.shape[2]
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, S, hd).astype(q.dtype)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel for the SSD intra-chunk compute (Mamba2 hot loop).
+
+Decomposition (DESIGN.md hardware adaptation): the quadratic *intra-chunk*
+work — an attention-like [Q,Q] masked-decay matmul per (batch·head, chunk) —
+runs on the MXU inside this kernel; the *inter-chunk* state recurrence is a
+cheap linear scan left to XLA in ``ops.py``. Per-program VMEM: x [Q,P],
+B/C [Q,N], the [Q,Q] decay/score tile and the [P,N] chunk state —
+Q=128, P=64, N=128 ⇒ ~0.2 MB, MXU-aligned.
+
+Outputs per (bh, chunk): y_intra [Q,P], chunk state contribution [P,N],
+and the cumulative log-decay cum [Q] (the combine step needs exp(cum)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,
+                      y_ref, st_ref, cum_ref, *, q: int):
+    x = x_ref[0, 0].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)  # [Q]
+    Bm = b_ref[0, 0].astype(jnp.float32)         # [Q, N]
+    Cm = c_ref[0, 0].astype(jnp.float32)         # [Q, N]
+    A = a_ref[0, 0]                              # scalar (this head)
+
+    dA = dt * A                                  # [Q]
+    cum = jnp.cumsum(dA)                         # [Q]
+    seg = cum[:, None] - cum[None, :]            # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    Lmat = jnp.where(jj <= ii, jnp.exp(seg), 0.0)
+
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [Q, Q]
+    M = G * Lmat * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [Q, P]
+
+    decay_end = jnp.exp(cum[-1] - cum)           # [Q]
+    wB = Bm * (dt * decay_end)[:, None]          # [Q, N]
+    st = jax.lax.dot_general(x, wB, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [P, N]
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+    cum_ref[0, 0, :, 0] = cum.astype(cum_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(x, dt, B, C, A, interpret: bool = False):
+    """x: [BH, nc, Q, P]; dt: [BH, nc, Q, 1]; B/C: [BHg, nc, Q, N] with
+    BHg = batch (heads share B/C); A: [BH, 1]. Heads of the same batch map
+    to the same B/C block via the grid index.
+
+    Returns (y_intra [BH,nc,Q,P], states [BH,nc,P,N], cum [BH,nc,Q,1]).
+    """
+    BH, nc, Q, P = x.shape
+    Bsz = B.shape[0]
+    H = BH // Bsz
+    N = B.shape[-1]
+
+    grid = (BH, nc)
+    xs = pl.BlockSpec((1, 1, Q, P), lambda h, c: (h, c, 0, 0))
+    ds = pl.BlockSpec((1, 1, Q, 1), lambda h, c: (h, c, 0, 0))
+    bs = pl.BlockSpec((1, 1, Q, N), lambda h, c: (h // H, c, 0, 0))
+    as_ = pl.BlockSpec((1, 1), lambda h, c: (h, 0))
+    ys = pl.BlockSpec((1, 1, Q, P), lambda h, c: (h, c, 0, 0))
+    ss = pl.BlockSpec((1, 1, P, N), lambda h, c: (h, c, 0, 0))
+    cs = pl.BlockSpec((1, 1, Q, 1), lambda h, c: (h, c, 0, 0))
+
+    return pl.pallas_call(
+        functools.partial(_ssd_chunk_kernel, q=Q),
+        grid=grid,
+        in_specs=[xs, ds, bs, bs, as_],
+        out_specs=[ys, ss, cs],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, nc, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc, Q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, B, C, A)

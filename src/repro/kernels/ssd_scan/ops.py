@@ -1,0 +1,62 @@
+"""Jitted SSD forward assembled from the Pallas intra-chunk kernel plus the
+XLA inter-chunk recurrence (linear scan over chunk states)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_chunk_pallas
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, chunk: int = 128, interpret: bool | None = None):
+    """Full SSD: x [B,S,H,P], dt [B,S,H], A [H], B/C [B,S,N].
+    Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    # rearrange to kernel layout
+    xk = x.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
+        Bsz * H, nc, chunk, P)
+    dtk = dt.astype(jnp.float32).transpose(0, 2, 1).reshape(
+        Bsz * H, nc, chunk, 1)
+    Bk = B.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Ck = C.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Ak = jnp.repeat(A.astype(jnp.float32)[None, :], Bsz, 0).reshape(
+        Bsz * H, 1)
+
+    y_intra, states, cum = ssd_chunk_pallas(xk, dtk, Bk, Ck, Ak,
+                                            interpret=interpret)
+    cum = cum[..., 0]                                   # [BH, nc, Q]
+    chunk_decay = jnp.exp(cum[:, :, -1])                # [BH, nc]
+
+    # inter-chunk recurrence (linear):
+    def step(h, inp):
+        st, dec = inp
+        h_new = h * dec[:, None, None] + st
+        return h_new, h
+
+    h0 = jnp.zeros((Bsz * H, P, N), jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                      # [BH, nc, P, N]
+
+    # combine: y = y_intra + exp(cum)·(C · h_prev)
+    Ck_bh = jnp.repeat(Ck[:, None], H, 1).reshape(Bsz * H, nc, chunk, N)
+    y_inter = jnp.einsum("hcqn,hcpn->hcqp", Ck_bh, h_prev) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, H, S, P).transpose(0, 2, 1, 3)
+    final = h_last.reshape(Bsz, H, P, N)
+    return y, final
+
+
+def ssd_reference(x, dt, A, B, C):
+    return ssd_ref(x, dt, A, B, C)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the Mamba2/SSD core: naive sequential recurrence.
+
+    h_t = exp(dt_t · A) ⊙ h_{t-1} + dt_t · (B_t ⊗ x_t)
+    y_t = C_t · h_t
+
+Shapes: x [B,S,H,P], dt [B,S,H] (post-softplus), A [H] (negative),
+B/C [B,S,N] (single group). Returns y [B,S,H,P] and final state
+[B,H,P,N]. f32 throughout — this is the ground truth for the chunked
+Pallas kernel and for ``blocks.mamba2_forward``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        decay = jnp.exp(dt_t * A[None, :])                  # [B,H]
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt_t, B_t, x_t)
+        h = h * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", C_t, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+          B.swapaxes(0, 1), C.swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h

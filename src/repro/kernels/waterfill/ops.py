@@ -1,0 +1,53 @@
+"""Jitted wrapper for the waterfill kernel: padding, backend selection.
+
+On TPU the Pallas kernel runs compiled; on CPU (this container) it runs in
+``interpret=True`` mode, which executes the kernel body per-program in
+Python — bit-identical control flow, validated against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.waterfill.kernel import waterfill_pallas
+from repro.kernels.waterfill.ref import waterfill_ref
+
+
+def _pad_to(x, n, axis, value=0.0):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def waterfill(weights, backlog, rho, mask, capacity, kind, dt: float = 1.0,
+              block_links: int = 8, interpret: bool | None = None):
+    """Batched per-link allocator solve. Shapes: [L, F] + [L]; returns [L, F].
+
+    Pads F to a 128-lane multiple and L to the link-block multiple, then
+    dispatches to the Pallas kernel.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    L, F = weights.shape
+    Fp = int(np.ceil(F / 128) * 128)
+    Lp = int(np.ceil(L / block_links) * block_links)
+    args = [
+        _pad_to(_pad_to(jnp.asarray(a, jnp.float32), Fp, 1), Lp, 0)
+        for a in (weights, backlog, rho, mask)
+    ]
+    cap = _pad_to(jnp.asarray(capacity, jnp.float32), Lp, 0)
+    knd = _pad_to(jnp.asarray(kind, jnp.int32), Lp, 0)
+    out = waterfill_pallas(*args, cap, knd, dt=dt, block_links=block_links,
+                           interpret=interpret)
+    return out[:L, :F]
+
+
+def waterfill_reference(weights, backlog, rho, mask, capacity, kind,
+                        dt: float = 1.0):
+    return waterfill_ref(weights, backlog, rho, mask, capacity, kind, dt)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the batched per-link allocator solves.
+
+Link semantics (paper Alg. 1):
+  kind 0 (uplink, eq. 3):  x_f = C · w_f / Σ w   (proportional-to-demand)
+  kind 1 (downlink, eq. 4): water-filling x_f = max(0, (θ ρ_f − L_f)/dt)
+                            with θ s.t. Σ x_f = C  (equal drain times)
+
+The oracle reuses the exact sort-based solvers from ``repro.core.allocator``
+vmapped over the link batch — the Pallas kernel must match it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocator import solve_downlink, solve_uplink
+
+
+def waterfill_ref(weights, backlog, rho, mask, capacity, kind, dt: float):
+    """weights/backlog/rho/mask: [L, F]; capacity/kind: [L]. -> rates [L, F]."""
+
+    def one(w, L_, r, m, c, k):
+        up = solve_uplink(w, m, c)
+        down = solve_downlink(L_, r, m, c, dt)
+        return jnp.where(k == 1, down, up)
+
+    return jax.vmap(one)(weights, backlog, rho, mask, capacity, kind)

@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The dry-run (and only the dry-run) fakes 512 host devices so the
+# production meshes (16x16 single-pod, 2x16x16 multi-pod) can be built.
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture × input-shape) cell and both production meshes:
+lower + compile the appropriate step (train_step / prefill / serve decode),
+print ``memory_analysis()`` (fits?) and ``cost_analysis()`` (FLOPs/bytes for
+§Roofline), and parse collective traffic from the compiled HLO. Results are
+cached as JSON under ``results/dryrun/``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k \
+      --mesh both -v
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    batch_shardings,
+    cache_shardings,
+    opt_shardings,
+    param_shardings,
+    replicated,
+)
+from repro.models.registry import (
+    ShapeSpec,
+    get_config,
+    get_model,
+    list_archs,
+    shapes_for,
+)
+from repro.sharding.policy import sharding_policy
+from repro.train.optim import AdamW
+from repro.train.step import make_train_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _decode_pos(spec: ShapeSpec) -> int:
+    return spec.seq_len - 1
+
+
+def build_lowerable(api, spec: ShapeSpec, mesh, loss_unroll: bool = False,
+                    rules_over: dict | None = None,
+                    constrain_grads: bool = False):
+    """Returns (fn, abstract_args, in_shardings) for the cell's step."""
+    cfg = api.cfg
+    ispecs = api.input_specs(spec)
+
+    if spec.kind == "train":
+        rules = dict(TRAIN_RULES, **(rules_over or {}))
+        with sharding_policy(mesh, rules):
+            opt = AdamW(lr=1e-4)
+            step = make_train_step(api, opt, loss_unroll=loss_unroll,
+                                   constrain_grads=constrain_grads)
+            params_ab = api.abstract_params()
+            opt_ab = jax.eval_shape(opt.init, params_ab)
+            p_sh = param_shardings(mesh, api, rules)
+            args = (params_ab, opt_ab, ispecs)
+            shardings = (p_sh, opt_shardings(mesh, p_sh, opt_ab),
+                         batch_shardings(mesh, ispecs, rules))
+            return step, args, shardings, rules
+
+    rules = dict(SERVE_RULES, **(rules_over or {}))
+    with sharding_policy(mesh, rules):
+        params_ab = api.abstract_params()
+        p_sh = param_shardings(mesh, api, rules)
+        if spec.kind == "prefill":
+            # vlm: the cache must also hold the vision prefix
+            vis = cfg.n_vis_tokens if cfg.family == "vlm" else 0
+
+            def fn(params, batch):
+                return api.prefill(params, batch, spec.seq_len + vis)
+            args = (params_ab, ispecs)
+            shardings = (p_sh, batch_shardings(mesh, ispecs, rules))
+            return fn, args, shardings, rules
+
+        # decode: one new token against a cache of seq_len
+        cache_ab = jax.eval_shape(
+            lambda: api.init_cache(spec.global_batch, spec.seq_len))
+        c_sh = cache_shardings(mesh, cache_ab, rules)
+
+        def fn(params, cache, tokens, pos):
+            return api.decode(params, cache, tokens, pos)
+
+        args = (params_ab, cache_ab, ispecs["tokens"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+        shardings = (p_sh, c_sh,
+                     batch_shardings(mesh, {"tokens": ispecs["tokens"]},
+                                     rules)["tokens"],
+                     replicated(mesh))
+        return fn, args, shardings, rules
+
+
+# ---------------------------------------------------------------------------
+# Cost probes: HloCostAnalysis counts rolled `while` bodies ONCE, so the
+# full (scan-over-layers) artifact under-reports FLOPs/bytes/collectives.
+# We therefore compile small probe variants with ALL scans unrolled
+# (scan_unroll/ssd_unroll/loss_unroll) at 2 depths × (1 or 3) sequence
+# lengths and extrapolate: linear in depth (exact — all archs are
+# depth-linear), quadratic in seq (exact for attention; SSD/MoE terms are
+# linear, absorbed by the fit). Decode cells have no seq-dependent loops,
+# so they are probed at the full cache length (depth-only, exact).
+# ---------------------------------------------------------------------------
+import dataclasses as _dc
+
+import numpy as _np
+
+PROBE_KEYS = ("flops", "bytes_accessed")
+
+
+def _depth_variants(cfg):
+    """(cfg_a, cfg_b, units_a, units_b, units_full) — depth in 'units'."""
+    # keep remat as in the real cell: the recompute FLOPs are part of the
+    # executed program (the MODEL_FLOPS/HLO ratio is meant to expose them)
+    probe = dict(scan_unroll=True, ssd_unroll=True)
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_attn_every
+        tail = cfg.n_layers % per
+        return (_dc.replace(cfg, n_layers=per + tail, **probe),
+                _dc.replace(cfg, n_layers=2 * per + tail, **probe),
+                1, 2, cfg.n_layers // per)
+    if cfg.family == "encdec":
+        return (_dc.replace(cfg, n_layers=1, n_enc_layers=1, **probe),
+                _dc.replace(cfg, n_layers=2, n_enc_layers=2, **probe),
+                1, 2, cfg.n_layers)
+    return (_dc.replace(cfg, n_layers=1, **probe),
+            _dc.replace(cfg, n_layers=2, **probe),
+            1, 2, cfg.n_layers)
+
+
+def _probe_one(cfg_p, spec, mesh, rules_over=None, constrain_grads=False):
+    api = get_model(cfg_p)
+    fn, args, shardings, rules = build_lowerable(api, spec, mesh,
+                                                 loss_unroll=True,
+                                                 rules_over=rules_over,
+                                                 constrain_grads=constrain_grads)
+    with sharding_policy(mesh, rules):
+        compiled = jax.jit(fn, in_shardings=shardings).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = hlo_stats.collective_stats(compiled.as_text())
+    rec = {"flops": float(cost.get("flops", 0.0)),
+           "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+    for k in hlo_stats.COLLECTIVES + ("total",):
+        rec[f"coll_{k}"] = float(coll.get(k, 0))
+    return rec
+
+
+def _fit_eval(xs, ys, x_full, deg: int = 2):
+    xs = _np.asarray(xs, float)
+    ys = _np.asarray(ys, float)
+    if len(xs) == 1:
+        return float(ys[0])
+    deg = min(len(xs) - 1, deg)
+    coef = _np.polyfit(xs, ys, deg)
+    return float(max(_np.polyval(coef, x_full), 0.0))
+
+
+# fit degree per metric: FLOPs/bytes have genuine quadratic-in-seq terms
+# (attention scores); collective traffic is linear in seq (weight gathers
+# constant + activation gathers linear) — extrapolating a quadratic through
+# three near-collinear points 8x beyond their range explodes/negates.
+def _fit_deg(key: str) -> int:
+    return 1 if key.startswith("coll_") else 2
+
+
+def probe_costs(cfg, spec: ShapeSpec, mesh, rules_over=None,
+                constrain_grads=False) -> dict:
+    cfg_a, cfg_b, ua, ub, ufull = _depth_variants(cfg)
+    if spec.kind == "decode":
+        seqs = [spec.seq_len]           # no seq-dependent rolled loops
+    else:
+        seqs = sorted({min(spec.seq_len, s) for s in (1024, 2048, 4096)})
+    keys = None
+    per_depth = []
+    raw = []
+    for cfg_p in (cfg_a, cfg_b):
+        recs = []
+        for s in seqs:
+            sp = ShapeSpec(spec.name, s, spec.global_batch, spec.kind)
+            recs.append(_probe_one(cfg_p, sp, mesh, rules_over,
+                                   constrain_grads))
+        raw.append(recs)
+        keys = keys or list(recs[0])
+        per_depth.append({k: _fit_eval(seqs, [r[k] for r in recs],
+                                       spec.seq_len, _fit_deg(k))
+                          for k in keys})
+    fa, fb = per_depth
+    out = {}
+    for k in keys:
+        out[k] = fa[k] + (fb[k] - fa[k]) * (ufull - ua) / (ub - ua)
+    out["probe_seqs"] = seqs
+    out["probe_units"] = [ua, ub, ufull]
+    out["probe_raw"] = raw  # per-depth, per-seq metric points (refittable)
+    return out
+
+
+def run_cell(arch: str, spec: ShapeSpec, multi_pod: bool,
+             verbose: bool = False, rules_name: str = "baseline",
+             constrain_grads: bool = False, cast_once: bool = False,
+             skip_probes: bool = False) -> dict:
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    suffix = "" if rules_name == "baseline" else f"__{rules_name}"
+    if constrain_grads:
+        suffix += "__cg"
+    if cast_once:
+        suffix += "__bf16g"
+    out_path = RESULTS / f"{arch}__{spec.name}__{mesh_name}{suffix}.json"
+    if out_path.exists():
+        rec = json.loads(out_path.read_text())
+        if rec.get("ok"):
+            return rec
+
+    cfg = get_config(arch)
+    if cast_once:
+        import dataclasses as __dc
+        cfg = __dc.replace(cfg, cast_once=True)
+    api = get_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    from repro.launch.shardings import PRESETS
+    rules_over = PRESETS[rules_name]
+    rec = {"arch": arch, "shape": spec.name, "mesh": mesh_name,
+           "rules": rules_name,
+           "kind": spec.kind, "seq_len": spec.seq_len,
+           "global_batch": spec.global_batch,
+           "n_chips": mesh.devices.size,
+           "params": api.count_params(),
+           "active_params": api.active_params(), "ok": False}
+    try:
+        fn, args, shardings, rules = build_lowerable(
+            api, spec, mesh, rules_over=rules_over,
+            constrain_grads=constrain_grads)
+        # donate params/opt-state (train) and cache (decode): the updated
+        # state reuses the input buffers — without this, params+opt+grads
+        # coexist and the biggest cells exceed HBM (qwen3: 22.6 -> <16 GB)
+        if spec.kind == "train":
+            donate = (0, 1)       # params, opt_state
+        elif spec.kind == "decode":
+            donate = (1,)         # cache (params are reused every step)
+        else:
+            donate = ()
+        with sharding_policy(mesh, rules):
+            lowered = jax.jit(fn, in_shardings=shardings,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        text = compiled.as_text()
+        coll = hlo_stats.collective_stats(text)
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_raw_scanned=float(cost.get("flops", 0.0)),
+            bytes_raw_scanned=float(cost.get("bytes accessed", 0.0)),
+            collectives_raw=coll,
+            memory=_mem_dict(mem),
+            hlo_ops=hlo_stats.hlo_op_histogram(text, 15),
+        )
+        try:
+            if skip_probes:
+                raise RuntimeError("probes skipped (--skip-probes)")
+            probes = probe_costs(cfg, spec, mesh, rules_over=rules_over,
+                                 constrain_grads=constrain_grads)
+            rec["flops"] = probes["flops"]
+            rec["bytes_accessed"] = probes["bytes_accessed"]
+            rec["collectives"] = {
+                k: probes[f"coll_{k}"]
+                for k in hlo_stats.COLLECTIVES + ("total",)
+            }
+            rec["probe"] = {"seqs": probes["probe_seqs"],
+                            "units": probes["probe_units"],
+                            "raw": probes.get("probe_raw")}
+        except Exception as e:  # probes are best-effort
+            rec["probe_error"] = f"{type(e).__name__}: {e}"
+            # fall back to the single-pod sibling's probe numbers, scaled to
+            # this mesh's per-device share (global work is mesh-invariant)
+            sib = RESULTS / f"{arch}__{spec.name}__pod_16x16.json"
+            scaled = False
+            if sib.exists():
+                sr = json.loads(sib.read_text())
+                if sr.get("ok") and "probe" in sr:
+                    f = sr["n_chips"] / rec["n_chips"]
+                    rec["flops"] = sr["flops"] * f
+                    rec["bytes_accessed"] = sr["bytes_accessed"] * f
+                    rec["collectives"] = {k: v * f for k, v in
+                                          sr["collectives"].items()}
+                    rec["probe_scaled_from"] = sib.name
+                    scaled = True
+            if not scaled:
+                rec["flops"] = rec["flops_raw_scanned"]
+                rec["bytes_accessed"] = rec["bytes_raw_scanned"]
+                rec["collectives"] = coll
+        if verbose:
+            print(compiled.memory_analysis())
+            print({k: v for k, v in cost.items()
+                   if k in ("flops", "bytes accessed")})
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    status = "OK " if rec["ok"] else "FAIL"
+    print(f"[{status}] {arch:22s} {spec.name:12s} {mesh_name:16s} "
+          f"{rec['total_s']:7.1f}s"
+          + ("" if rec["ok"] else f"  {rec.get('error', '')[:120]}"))
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "peak_memory_in_bytes",
+              "generated_code_size_in_bytes", "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["both", "single", "multi"])
+    ap.add_argument("--rules", default="baseline",
+                    help="sharding preset (see launch/shardings.PRESETS)")
+    ap.add_argument("--constrain-grads", action="store_true",
+                    help="pin grad shardings to param shardings (hillclimb)")
+    ap.add_argument("--cast-once", action="store_true",
+                    help="bf16 param cast before the layer scan (hillclimb)")
+    ap.add_argument("--skip-probes", action="store_true",
+                    help="compile-only (reuse single-pod sibling costs)")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    meshes = {"both": [False, True], "single": [False],
+              "multi": [True]}[args.mesh]
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for spec in shapes_for(cfg):
+            if args.shape != "all" and spec.name not in args.shape.split(","):
+                continue
+            for mp in meshes:
+                rec = run_cell(arch, spec, mp, verbose=args.verbose,
+                               rules_name=args.rules,
+                               constrain_grads=args.constrain_grads,
+                               cast_once=args.cast_once,
+                               skip_probes=args.skip_probes)
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

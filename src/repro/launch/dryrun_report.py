@@ -1,0 +1,39 @@
+"""§Dry-run summary table: per (arch × shape × mesh): compile status,
+lower/compile seconds, per-device argument/peak memory, collective count.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_report
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def main() -> None:
+    recs = [json.loads(f.read_text()) for f in sorted(RESULTS.glob("*.json"))]
+    base = [r for r in recs if r.get("rules", "baseline") == "baseline"
+            and "__cg" not in str(r) ]
+    print("| arch | shape | mesh | status | compile s | args GB/dev | "
+          "peak GB/dev | collectives |")
+    print("|---|---|---|---|---|---|---|---|")
+    n_ok = n_fail = 0
+    for r in base:
+        if r.get("ok"):
+            n_ok += 1
+            m = r.get("memory", {})
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                  f"{r.get('compile_s', 0):.1f} | "
+                  f"{m.get('argument_size_in_bytes', 0) / 1e9:.2f} | "
+                  f"{m.get('peak_memory_in_bytes', 0) / 1e9:.2f} | "
+                  f"{r.get('collectives_raw', {}).get('count', '?')} |")
+        else:
+            n_fail += 1
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | | | "
+                  f"| {r.get('error', '')[:60]} |")
+    print(f"\n**{n_ok} cells compiled, {n_fail} failed.**")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""HLO text statistics: collective-traffic extraction for the roofline.
+
+``cost_analysis()`` has no collective-bytes entry, so we parse the
+post-SPMD HLO (``compiled.as_text()``). Operands are referenced by name
+(no inline shapes), so we read each collective's RESULT shape(s) and
+convert to *operand* bytes using the replica-group size:
+
+    all-reduce / all-to-all / collective-permute: operand == result
+    all-gather:     operand = result / group_size
+    reduce-scatter: operand = result × group_size
+
+Caveat (documented in EXPERIMENTS.md): collectives inside rolled
+``while`` loops (scan-over-layers) appear once; the dry-run corrects via
+depth-probe extrapolation, not by trip-count parsing.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<variant>-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind (full-program totals, i.e.
+    bytes × participating shards)."""
+    out: dict = defaultdict(int)
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        if m.group("variant") == "-done":
+            continue
+        kind = m.group("kind")
+        count += 1
+        result_bytes = sum(
+            shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group("result"))
+        )
+        g = _GROUPS_RE.search(line)
+        gsize = int(g.group(2)) if g else 1
+        if kind == "all-gather":
+            operand = result_bytes // max(gsize, 1)
+        elif kind == "reduce-scatter":
+            operand = result_bytes * gsize
+        else:
+            operand = result_bytes
+        # result shape is per-shard; total traffic scales with shard count —
+        # we report per-shard operand bytes summed over ops; the roofline
+        # divides by per-chip link bandwidth, so per-shard is the right unit.
+        out[kind] += operand
+    out["total"] = sum(out[k] for k in COLLECTIVES if k in out)
+    out["count"] = count
+    return dict(out)
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 25) -> list[tuple[str, int]]:
+    """Instruction-name histogram (quick look at what dominates the HLO)."""
+    ops: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*([a-z-]+)\(",
+            line)
+        if m:
+            ops[m.group(1)] += 1
+    return sorted(ops.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,96 @@
+"""Sharding trees for the launcher/dry-run: params, optimizer state, batches
+and decode caches, derived from logical axes + the active policy rules."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.blocks import ParamSpec
+from repro.sharding import policy as pol
+
+# Named rule presets (hillclimb levers, EXPERIMENTS.md §Perf):
+#   baseline  — FSDP("embed"->data) + TP + SP (the paper-faithful default)
+#   dp_wide   — no tensor parallelism: the model axis joins the batch
+#               (right for small archs where TP fragments tiny matmuls)
+#   no_sp     — disable sequence-parallel residuals (trades memory for
+#               fewer activation collectives)
+#   tp_seq    — TP + sequence sharding of long KV (serving, long context)
+PRESETS: dict[str, dict] = {
+    "baseline": {},
+    "dp_wide": {
+        "batch": ("pod", "data", "model"),
+        "heads": None, "kv_heads": None, "mlp": None, "vocab": None,
+        "experts": None, "inner": None, "act_seq": None, "kv_seq": None,
+        "embed": ("data", "model"),
+    },
+    "no_sp": {"act_seq": None},
+    "tp_seq": {"embed": None},
+}
+
+# rules overrides per phase
+TRAIN_RULES: dict = {}   # defaults: FSDP ("embed"->data) + TP + SP
+# Serving inherits FSDP weight sharding: replicating weights across the
+# data axis does not fit the big archs (dbrx f32 params = 33 GB/chip when
+# only model-sharded). The per-step weight all-gathers this implies on the
+# decode path are a measured baseline cost — see §Perf (bf16 weight
+# gathers / weight-stationary serving are the hillclimb).
+SERVE_RULES: dict = {}
+
+
+def param_shardings(mesh: Mesh, api, rules: dict | None = None):
+    axes = api.param_axes()
+    ab = api.abstract_params()
+    return jax.tree_util.tree_map(
+        lambda ax, a: pol.param_sharding(mesh, ax, a.shape, rules),
+        axes, ab,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def batch_shardings(mesh: Mesh, batch_specs: dict, rules=None):
+    out = {}
+    for k, v in batch_specs.items():
+        ax = ["batch"] + [None] * (len(v.shape) - 1)
+        out[k] = pol.param_sharding(mesh, tuple(ax), v.shape, rules)
+    return out
+
+
+_CACHE_AXES = {
+    ("k", 5): ("layers", "batch", "kv_seq", "kv_heads", None),
+    ("v", 5): ("layers", "batch", "kv_seq", "kv_heads", None),
+    ("xk", 5): ("layers", "batch", None, "kv_heads", None),
+    ("xv", 5): ("layers", "batch", None, "kv_heads", None),
+    ("k", 6): ("layers", "layers", "batch", "kv_seq", "kv_heads", None),
+    ("v", 6): ("layers", "layers", "batch", "kv_seq", "kv_heads", None),
+    ("conv", 4): ("layers", "batch", None, "inner"),
+    ("conv", 5): ("layers", "layers", "batch", None, "inner"),
+    ("ssm", 5): ("layers", "batch", "inner", None, None),
+    ("ssm", 6): ("layers", "layers", "batch", "inner", None, None),
+}
+
+
+def cache_shardings(mesh: Mesh, cache_ab, rules=None):
+    def leaf(path, a):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        ax = _CACHE_AXES.get((name, len(a.shape)))
+        if ax is None:
+            ax = ("layers", "batch") + (None,) * (len(a.shape) - 2)
+        return pol.param_sharding(mesh, ax, a.shape, rules)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_ab)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def opt_shardings(mesh: Mesh, params_sh, opt_state_ab):
+    """AdamState(step, m, v): step replicated; m/v mirror params."""
+    from repro.train.optim import AdamState
+    return AdamState(step=replicated(mesh), m=params_sh, v=params_sh)

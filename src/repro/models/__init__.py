@@ -1,0 +1,9 @@
+from repro.models.lm import ModelConfig  # noqa: F401
+from repro.models.registry import (  # noqa: F401
+    ModelApi,
+    ShapeSpec,
+    get_config,
+    get_model,
+    list_archs,
+    shapes_for,
+)

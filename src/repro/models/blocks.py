@@ -1,0 +1,581 @@
+"""Model building blocks — pure functions over parameter pytrees.
+
+Conventions:
+  * params are nested dicts of f32 arrays; compute casts to ``cfg.dtype``;
+  * every parameter has *logical axes* (see ``repro.sharding.policy``)
+    declared in a parallel ``ParamSpec`` tree, from which the launcher
+    derives NamedShardings (FSDP on "embed", TP on "heads"/"mlp"/"vocab",
+    EP on "experts");
+  * stacked-layer params carry a leading "layers" axis and are consumed by
+    ``jax.lax.scan`` (compile time stays flat in depth — required for the
+    94-layer MoE dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.policy import shard_as
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"   # normal | zeros | ones | small
+    scale: float = 0.02
+
+
+def build_params(key, specs) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for k, s in zip(keys, flat):
+        if s.init == "zeros":
+            leaves.append(jnp.zeros(s.shape, jnp.float32))
+        elif s.init == "ones":
+            leaves.append(jnp.ones(s.shape, jnp.float32))
+        elif s.init == "small":
+            leaves.append(jax.random.normal(k, s.shape, jnp.float32)
+                          * (s.scale / math.sqrt(max(s.shape[-1], 1))))
+        else:
+            leaves.append(jax.random.normal(k, s.shape, jnp.float32) * s.scale)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def spec_axes(specs) -> Any:
+    """Same-structure tree of logical-axes tuples."""
+    return jax.tree_util.tree_map(
+        lambda s: s.axes, specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def abstract_params(specs) -> Any:
+    """ShapeDtypeStructs for dry-run lowering (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# --------------------------------------------------------------------------
+# norms & activations
+# --------------------------------------------------------------------------
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * weight + bias).astype(dt)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., S, n_heads, head_dim]; positions: [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                 # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, grouped einsums — repeated KV is never materialized)
+# --------------------------------------------------------------------------
+def attn_specs(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+               qkv_bias: bool = False) -> dict:
+    s = {
+        "wq": ParamSpec((d_model, n_heads, head_dim), ("embed", "heads", None)),
+        "wk": ParamSpec((d_model, n_kv, head_dim), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((d_model, n_kv, head_dim), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((n_heads, head_dim, d_model), ("heads", None, "embed")),
+    }
+    if qkv_bias:
+        s["bq"] = ParamSpec((n_heads, head_dim), ("heads", None), "zeros")
+        s["bk"] = ParamSpec((n_kv, head_dim), ("kv_heads", None), "zeros")
+        s["bv"] = ParamSpec((n_kv, head_dim), ("kv_heads", None), "zeros")
+    return s
+
+
+def qkv_proj(p, x, n_heads: int, n_kv: int, rope_theta: float | None,
+             positions):
+    """x: [B,S,D] -> q [B,S,H,hd], k/v [B,S,K,hd] (+bias, +RoPE)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def gqa_attend(q, k, v, mask, *, softmax_in_f32: bool = True):
+    """Grouped-query attention core.
+
+    q: [B,S,H,hd], k/v: [B,T,K,hd] with H = K·G. mask: broadcastable to
+    [B,1,1,S,T] (True = attend). Returns [B,S,H,hd].
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    q = q.reshape(B, S, K, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) * scale  # [B,K,G,S,T]
+    if softmax_in_f32:
+        scores = scores.astype(jnp.float32)
+    # sharding fallback for head counts not divisible by the model axis:
+    # shard the query-sequence dim of the score tensor instead
+    scores = shard_as(scores, "batch", "kv_heads", None, "act_seq", None)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def causal_mask(S: int, T: int, offset: int = 0):
+    """True where query i (at absolute pos offset+i) may attend key j."""
+    i = jnp.arange(S)[:, None] + offset
+    j = jnp.arange(T)[None, :]
+    return (j <= i)[None, None, None]
+
+
+def blockwise_gqa_attend(q, k, v, *, causal: bool, block_q: int = 1024,
+                         block_k: int = 2048):
+    """Memory-bounded attention: scan over query blocks, inner scan over KV
+    blocks with online softmax (flash-attention dataflow expressed in XLA).
+    Peak live score tile is [B,K,G,BQ,BK] instead of [B,K,G,S,T] — this is
+    what makes the 32k-prefill cells fit. Same math as ``gqa_attend``.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+
+    def _divisor_block(n, target):
+        for d in range(min(target, n), 0, -1):
+            if n % d == 0:
+                return d
+        return n
+
+    bq = _divisor_block(S, block_q)
+    bk = _divisor_block(T, block_k)
+    scale = 1.0 / math.sqrt(hd)
+    qb = q.reshape(B, S // bq, bq, K, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(B, T // bk, bk, K, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, T // bk, bk, K, hd).transpose(1, 0, 3, 2, 4)
+
+    def q_block(qi, q_i):
+        # q_i: [B,K,G,bq,hd]
+        def kv_step(carry, inp):
+            kj, k_j, v_j = inp
+            acc, m, l = carry
+            s = jnp.einsum("bkgqd,bktd->bkgqt", q_i.astype(jnp.float32),
+                           k_j.astype(jnp.float32)) * scale
+            if causal:
+                rows = qi * bq + jnp.arange(bq)[:, None]
+                cols = kj * bk + jnp.arange(bk)[None, :]
+                s = jnp.where((cols <= rows)[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * corr + jnp.einsum(
+                "bkgqt,bktd->bkgqd", p, v_j.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, K, G, bq, hd), jnp.float32)
+        m0 = jnp.full((B, K, G, bq, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, K, G, bq, 1), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.arange(T // bk), kb, vb))
+        return acc / jnp.maximum(l, 1e-30)
+
+    out = jax.lax.map(lambda iq: q_block(iq[0], iq[1]),
+                      (jnp.arange(S // bq), qb))
+    # [nq,B,K,G,bq,hd] -> [B,S,H,hd]
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, K, G, S, hd)
+    return out.reshape(B, H, S, hd).swapaxes(1, 2).astype(q.dtype)
+
+
+def attention(p, x, cfg, positions, mask=None):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    q, k, v = qkv_proj(p, x, cfg.n_heads, cfg.n_kv_heads, cfg.rope_theta,
+                       positions)
+    q = shard_as(q, "batch", "seq", "heads", None)
+    k = shard_as(k, "batch", "seq", "kv_heads", None)
+    v = shard_as(v, "batch", "seq", "kv_heads", None)
+    S = x.shape[1]
+    if mask is None:
+        mask = causal_mask(S, S) if cfg.causal else jnp.ones(
+            (1, 1, 1, S, S), bool)
+    out = gqa_attend(q, k, v, mask)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard_as(out, "batch", "seq", "embed_act"), (k, v)
+
+
+def attention_decode(p, x, cfg, cache_k, cache_v, pos):
+    """Single-token decode against a KV cache.
+
+    x: [B,1,D]; cache_k/v: [B,T,K,hd] (ring buffer, absolute positions);
+    pos: [] int32 current position. Returns (out, (new_k, new_v)).
+    """
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k_new, v_new = qkv_proj(p, x, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.rope_theta, positions)
+    T = cache_k.shape[1]
+    slot = pos % T
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    cache_k = shard_as(cache_k, "batch", "kv_seq", "kv_heads", None)
+    cache_v = shard_as(cache_v, "batch", "kv_seq", "kv_heads", None)
+    valid = (jnp.arange(T) <= pos)[None, None, None, None, :]  # [1,1,1,1,T]
+    out = gqa_attend(q, cache_k, cache_v, valid)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, (cache_k, cache_v)
+
+
+def cross_attention(p, x, kv_cached, mask=None):
+    """Encoder-decoder cross attention (whisper). kv_cached = (k, v) from
+    the encoder output projections; no RoPE."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    k, v = kv_cached
+    S, T = q.shape[1], k.shape[1]
+    if mask is None:
+        mask = jnp.ones((1, 1, 1, S, T), bool)
+    out = gqa_attend(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def cross_kv(p, enc_out):
+    dt = enc_out.dtype
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"].astype(dt))
+    if "bk" in p:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def mlp_specs(d_model: int, d_ff: int, act: str = "swiglu") -> dict:
+    if act == "swiglu":
+        return {
+            "w_gate": ParamSpec((d_model, d_ff), ("embed", "mlp"), "small"),
+            "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp"), "small"),
+            "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed"), "small"),
+        }
+    return {  # gelu (whisper/stablelm-style 2-layer)
+        "w_in": ParamSpec((d_model, d_ff), ("embed", "mlp"), "small"),
+        "b_in": ParamSpec((d_ff,), ("mlp",), "zeros"),
+        "w_out": ParamSpec((d_ff, d_model), ("mlp", "embed"), "small"),
+        "b_out": ParamSpec((d_model,), ("embed",), "zeros"),
+    }
+
+
+def mlp(p, x, act: str = "swiglu"):
+    dt = x.dtype
+    if act == "swiglu":
+        h = silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+        h = shard_as(h, "batch", "seq", "mlp")
+        return h @ p["w_down"].astype(dt)
+    h = jax.nn.gelu(x @ p["w_in"].astype(dt) + p["b_in"].astype(dt))
+    h = shard_as(h, "batch", "seq", "mlp")
+    return h @ p["w_out"].astype(dt) + p["b_out"].astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (top-k router, dense one-hot dispatch, EP-shardable)
+# --------------------------------------------------------------------------
+def moe_specs(d_model: int, d_ff: int, n_experts: int) -> dict:
+    return {
+        "router": ParamSpec((d_model, n_experts), ("embed", "experts")),
+        "w_gate": ParamSpec((n_experts, d_model, d_ff),
+                            ("experts", "embed", "expert_mlp"), "small"),
+        "w_up": ParamSpec((n_experts, d_model, d_ff),
+                          ("experts", "embed", "expert_mlp"), "small"),
+        "w_down": ParamSpec((n_experts, d_ff, d_model),
+                            ("experts", "expert_mlp", "embed"), "small"),
+    }
+
+
+def moe_ffn(p, x, n_experts: int, top_k: int, capacity_factor: float = 1.25):
+    """Token-choice top-k MoE with SHARD-LOCAL sort-based capacity dispatch.
+
+    Tokens are routed to their top-k experts by *gather/scatter* (zero
+    matmul FLOPs — the compiled FLOP count stays ≈ active-expert compute,
+    unlike one-hot-matmul dispatch which inflates it by E/k).
+
+    SPMD shape: the token dim is pre-split into G groups matching the
+    batch sharding, and ALL index ops (sort, gather, scatter) are batched
+    over that sharded leading dim — dispatch is shard-local (no token
+    exchange across the DP axis; cross-chip traffic is only the EP
+    dimension of the expert einsums). A global argsort makes XLA
+    all-gather the whole token array per layer (measured: TBs/step).
+
+    Per-expert capacity C = ceil(top_k·T_local/E · cap_factor); overflow
+    tokens are dropped for that expert (Switch/GShard semantics).
+
+    Returns (out, aux_loss).
+    """
+    from repro.sharding.policy import shard_count
+
+    dt = x.dtype
+    B, S, D = x.shape
+    T = B * S
+    E, K = n_experts, top_k
+    G = shard_count("batch")
+    if T % G:
+        G = 1
+    Tl = T // G
+    C = max(int(math.ceil(K * Tl / E * capacity_factor)), K)
+
+    xf = x.reshape(G, Tl, D)
+    xf = shard_as(xf, "batch", None, "embed_act")
+    logits = (xf @ p["router"].astype(dt)).astype(jnp.float32)   # [G,Tl,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, K)                     # [G,Tl,K]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort (token, k)-slots by expert id, per group ----------------
+    expert_flat = top_idx.reshape(G, Tl * K)
+    order = jnp.argsort(expert_flat, axis=-1, stable=True)       # [G,Tl*K]
+    tok_sorted = jnp.take_along_axis(
+        jnp.broadcast_to(jnp.arange(Tl * K) // K, (G, Tl * K)), order, -1)
+    exp_sorted = jnp.take_along_axis(expert_flat, order, -1)
+    gate_sorted = jnp.take_along_axis(top_p.reshape(G, Tl * K), order, -1)
+    # position of each slot within its expert's run
+    ar = jnp.arange(Tl * K)[None, :]
+    seg_start = jax.vmap(
+        lambda e: jnp.searchsorted(e, jnp.arange(E), side="left"))(exp_sorted)
+    pos_in_e = ar - jnp.take_along_axis(seg_start, exp_sorted, -1)
+    keep = pos_in_e < C                                          # capacity
+
+    # ---- gather tokens to [G, E, C, D] --------------------------------
+    slot = jnp.where(keep, exp_sorted * C + pos_in_e, E * C)     # E*C: trash
+
+    def fill(val, dtype):
+        buf = jnp.zeros((G, E * C + 1), dtype)
+        return buf.at[jnp.arange(G)[:, None], slot].set(
+            val.astype(dtype), mode="drop")[:, : E * C].reshape(G, E, C)
+
+    src_tok = fill(tok_sorted, jnp.int32)
+    src_gate = fill(jnp.where(keep, gate_sorted, 0.0), jnp.float32)
+    src_valid = fill(keep, jnp.float32)
+
+    xe = jnp.take_along_axis(
+        xf, src_tok.reshape(G, E * C)[..., None], axis=1
+    ).reshape(G, E, C, D)
+    xe = xe * src_valid[..., None].astype(dt)
+    xe = shard_as(xe, "batch", "experts", None, "embed_act")
+
+    # ---- expert FFN (EP: experts sharded, contraction local) ----------
+    h = silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt)))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dt))
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    out_e = out_e * src_gate[..., None].astype(dt)
+
+    # ---- combine: scatter-add back to tokens, per group ----------------
+    out = jnp.zeros((G, Tl, D), dt).at[
+        jnp.arange(G)[:, None], src_tok.reshape(G, E * C)
+    ].add(out_e.reshape(G, E * C, D))
+    out = out.reshape(B, S, D)
+    out = shard_as(out, "batch", "act_seq", "embed_act")
+
+    # load-balancing aux loss (Switch-style, global mean)
+    me = probs.mean(axis=(0, 1))                                 # [E]
+    ce = jax.nn.one_hot(top_idx, E, dtype=jnp.float32).sum(2).mean((0, 1))
+    aux = E * jnp.sum(me * ce / K)
+    return out, aux.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Mamba2 / SSD (state-space duality, arXiv:2405.21060) — chunked scan
+# --------------------------------------------------------------------------
+def mamba2_specs(d_model: int, d_state: int, head_dim: int = 64,
+                 expand: int = 2, d_conv: int = 4) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    return {
+        "in_proj": ParamSpec(
+            (d_model, 2 * d_inner + 2 * d_state + n_heads),
+            ("embed", "inner"), "small"),
+        "conv_w": ParamSpec((d_conv, conv_dim), (None, "inner")),
+        "conv_b": ParamSpec((conv_dim,), ("inner",), "zeros"),
+        "A_log": ParamSpec((n_heads,), ("inner",), "zeros"),
+        "D": ParamSpec((n_heads,), ("inner",), "ones"),
+        "dt_bias": ParamSpec((n_heads,), ("inner",), "zeros"),
+        "norm_w": ParamSpec((d_inner,), ("inner",), "ones"),
+        "out_proj": ParamSpec((d_inner, d_model), ("inner", "embed"), "small"),
+    }
+
+
+def _ssd_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv. x: [B,S,C], w: [k,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def mamba2_forward(p, x, cfg, chunk: int = 128, return_state: bool = False):
+    """SSD block, full sequence. x: [B,S,D] -> [B,S,D].
+
+    Chunked algorithm: intra-chunk 'attention form' + inter-chunk state
+    recurrence (scan over chunks) — the TPU-friendly formulation the Pallas
+    ``ssd_scan`` kernel tiles into VMEM. With ``return_state`` also returns
+    ``(conv_state, ssm_state)`` for decode continuation.
+    """
+    dt_ = x.dtype
+    B, S, D = x.shape
+    d_inner, H = _ssd_dims(cfg)
+    N = cfg.ssm_state
+    P_ = cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    xbc_pre = xbc
+    xbc = silu(causal_conv1d(xbc, p["conv_w"].astype(dt_),
+                             p["conv_b"].astype(dt_)))
+    xs, B_, C_ = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xs = shard_as(xs, "batch", "seq", "inner")
+
+    # f32 SSM core
+    xs = xs.reshape(B, S, H, P_).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # [H]
+    B_ = B_.astype(jnp.float32)                                   # [B,S,N]
+    C_ = C_.astype(jnp.float32)
+
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"seq {S} not divisible by ssd_chunk {chunk}"
+    nc = S // chunk
+    # scan over chunks: intra-chunk quadratic form + carried state. Only one
+    # chunk's [B,q,q,H] decay tile is ever live (32k-seq cells stay bounded).
+    xs_c = xs.reshape(B, nc, chunk, H, P_).swapaxes(0, 1)
+    dt_c = dt.reshape(B, nc, chunk, H).swapaxes(0, 1)
+    B_c = B_.reshape(B, nc, chunk, N).swapaxes(0, 1)
+    C_c = C_.reshape(B, nc, chunk, N).swapaxes(0, 1)
+    ii, jj = jnp.meshgrid(jnp.arange(chunk), jnp.arange(chunk),
+                          indexing="ij")
+    causal = (jj <= ii)[None, :, :, None]
+
+    def chunk_step(h, inp):
+        x_c, d_c, b_c, c_c = inp                                  # [B,q,...]
+        dA = d_c * A[None, None, :]                               # [B,q,H]
+        cum = jnp.cumsum(dA, axis=1)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]             # [B,i,j,H]
+        Lmat = jnp.where(causal, jnp.exp(seg), 0.0)
+        G = jnp.einsum("bin,bjn->bij", c_c, b_c)                  # [B,i,j]
+        M = G[..., None] * Lmat * d_c[:, None, :, :]              # [B,i,j,H]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, x_c)
+        y_inter = jnp.einsum("bin,bih,bhpn->bihp",
+                             c_c, jnp.exp(cum), h)
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)              # [B,q,H]
+        st = jnp.einsum("bqh,bqn,bqhp->bhpn",
+                        d_c * decay_to_end, b_c, x_c)
+        h_new = h * jnp.exp(cum[:, -1])[:, :, None, None] + st
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, P_, N), jnp.float32)
+    h_last, y = jax.lax.scan(chunk_step, h0, (xs_c, dt_c, B_c, C_c),
+                             unroll=getattr(cfg, "ssd_unroll", False))
+    y = y.swapaxes(0, 1).reshape(B, S, H, P_)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs.reshape(
+        B, S, H, P_)
+    y = y.reshape(B, S, d_inner).astype(dt_)
+
+    y = rms_norm(y * silu(z), p["norm_w"])
+    out = y @ p["out_proj"].astype(dt_)
+    if not return_state:
+        return out, None
+    k = p["conv_w"].shape[0]
+    conv_state = xbc_pre[:, S - (k - 1):, :]
+    return out, (conv_state, h_last)
+
+
+def mamba2_decode(p, x, cfg, conv_state, ssm_state):
+    """Single-token SSD recurrence. x: [B,1,D].
+
+    conv_state: [B, d_conv-1, conv_dim]; ssm_state: [B,H,P,N].
+    """
+    dt_ = x.dtype
+    B = x.shape[0]
+    d_inner, H = _ssd_dims(cfg)
+    N, P_ = cfg.ssm_state, cfg.ssm_head_dim
+
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(dt_)
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)
+    new_conv_state = window[:, 1:]
+    w = p["conv_w"].astype(dt_)
+    xbc = silu(jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(dt_))
+    xs, B_, C_ = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    xs = xs.reshape(B, H, P_).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])                                 # [B,H]
+    B_ = B_.astype(jnp.float32)
+    C_ = C_.astype(jnp.float32)
+
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, B_, xs)
+    new_ssm = ssm_state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C_, new_ssm)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(B, d_inner).astype(dt_)
+    y = rms_norm(y * silu(z), p["norm_w"])
+    return (y @ p["out_proj"].astype(dt_))[:, None, :], new_conv_state, new_ssm

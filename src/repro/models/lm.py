@@ -1,0 +1,531 @@
+"""Unified decoder LM covering the dense / MoE / SSM / hybrid families.
+
+One parameter layout, one forward, one decode path; the per-layer block is
+selected by ``cfg.family``. Layers are *stacked* ([L, ...] leading axis) and
+consumed by ``jax.lax.scan`` so compile time is depth-independent (the
+94-layer qwen3-moe dry-run lowers in seconds). ``jax.checkpoint`` inside the
+scan gives full-layer remat for training.
+
+Families:
+  dense  — pre-norm GQA attention + (SwiGLU|GELU) MLP
+  moe    — attention + top-k MoE FFN (sort-based dispatch, EP-shardable)
+  ssm    — Mamba2/SSD blocks (attention-free)
+  hybrid — Zamba2-style: Mamba2 backbone with one *shared* attention+MLP
+           block applied every ``hybrid_attn_every`` layers
+  vlm    — dense backbone with a prepended (stubbed) patch-embedding prefix
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.blocks import ParamSpec
+from repro.sharding.policy import shard_as
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    act: str = "swiglu"
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    qkv_bias: bool = False
+    qk_norm: bool = False        # qwen3-style per-head q/k RMSNorm
+    rope_theta: float | None = 10000.0
+    causal: bool = True
+    tie_embeddings: bool = True
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # ssm
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssd_chunk: int = 128
+    # hybrid
+    hybrid_attn_every: int = 0
+    # encdec (whisper)
+    n_enc_layers: int = 0
+    # vlm
+    n_vis_tokens: int = 0
+    # execution
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    sub_quadratic: bool = False  # supports 500k-token decode
+    # cost-probe mode (dry-run only): unroll scans so HLO FLOP counting is
+    # exact — rolled `while` bodies are counted once by HloCostAnalysis
+    scan_unroll: bool = False
+    ssd_unroll: bool = False
+    # §Perf lever: cast the sharded param tree to the compute dtype ONCE at
+    # step entry, so FSDP all-gathers move bf16 instead of f32
+    cast_once: bool = False
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    def reduced(self, **over) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 4) if self.family != "hybrid" else 6,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=128,
+            vocab=256,
+            head_dim=16 if self.head_dim else None,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            hybrid_attn_every=3 if self.hybrid_attn_every else 0,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            n_vis_tokens=min(self.n_vis_tokens, 8),
+            dtype=jnp.float32,
+        )
+        small.update(over)
+        return dataclasses.replace(self, **small)
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+def _norm_specs(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": ParamSpec((d,), ("embed",), "ones"),
+                "b": ParamSpec((d,), ("embed",), "zeros")}
+    return {"w": ParamSpec((d,), ("embed",), "ones")}
+
+
+def _apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return B.layer_norm(x, p["w"], p["b"])
+    return B.rms_norm(x, p["w"])
+
+
+def _attn_specs(cfg):
+    s = B.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                     cfg.qkv_bias)
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((cfg.hd,), (None,), "ones")
+        s["k_norm"] = ParamSpec((cfg.hd,), (None,), "ones")
+    return s
+
+
+def layer_specs(cfg) -> dict:
+    if cfg.family == "ssm":
+        return {
+            "norm": _norm_specs(cfg),
+            "mamba": B.mamba2_specs(cfg.d_model, cfg.ssm_state,
+                                    cfg.ssm_head_dim, cfg.ssm_expand,
+                                    cfg.ssm_conv),
+        }
+    s = {
+        "ln1": _norm_specs(cfg),
+        "attn": _attn_specs(cfg),
+        "ln2": _norm_specs(cfg),
+    }
+    if cfg.family == "moe":
+        s["moe"] = B.moe_specs(cfg.d_model, cfg.d_ff, cfg.n_experts)
+    else:
+        s["mlp"] = B.mlp_specs(cfg.d_model, cfg.d_ff, cfg.act)
+    return s
+
+
+def stack_specs(specs, n: int):
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                            s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def model_specs(cfg) -> dict:
+    s: dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+        "final_norm": _norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        s["unembed"] = ParamSpec((cfg.d_model, cfg.vocab),
+                                 ("embed", "vocab"), "small")
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // per
+        ssm_cfg = dataclasses.replace(cfg, family="ssm")
+        s["groups"] = stack_specs(
+            stack_specs(layer_specs(ssm_cfg), per), n_groups)
+        dense_cfg = dataclasses.replace(cfg, family="dense")
+        s["shared"] = layer_specs(dense_cfg)   # ONE shared block
+        rem = cfg.n_layers - n_groups * per
+        if rem:
+            s["tail"] = stack_specs(layer_specs(ssm_cfg), rem)
+    else:
+        s["layers"] = stack_specs(layer_specs(cfg), cfg.n_layers)
+    if cfg.family == "vlm":
+        # stubbed modality frontend: a trained projection of precomputed
+        # patch embeddings into the LM's embedding space
+        s["vis_proj"] = ParamSpec((cfg.d_model, cfg.d_model),
+                                  ("embed", "embed_act"), "small")
+    return s
+
+
+def init_params(cfg, key):
+    return B.build_params(key, model_specs(cfg))
+
+
+def abstract_params(cfg):
+    return B.abstract_params(model_specs(cfg))
+
+
+def param_axes(cfg):
+    return B.spec_axes(model_specs(cfg))
+
+
+# --------------------------------------------------------------------------
+# blocks (single layer, unstacked params)
+# --------------------------------------------------------------------------
+def _maybe_qk_norm(cfg, p, q, k):
+    if cfg.qk_norm:
+        q = B.rms_norm(q, p["q_norm"])
+        k = B.rms_norm(k, p["k_norm"])
+    return q, k
+
+
+def _attn_block(cfg, p, x, positions, mask=None):
+    h = _apply_norm(cfg, p["ln1"], x)
+    q, k, v = B.qkv_proj(p["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.rope_theta, positions)
+    q, k = _maybe_qk_norm(cfg, p["attn"], q, k)
+    q = shard_as(q, "batch", "seq", "heads", None)
+    S = x.shape[1]
+    if S >= 8192 and mask is None:
+        # long sequences: blockwise online-softmax (never materialize SxS)
+        o = B.blockwise_gqa_attend(q, k, v, causal=cfg.causal)
+    else:
+        if mask is None:
+            mask = B.causal_mask(S, S) if cfg.causal else jnp.ones(
+                (1, 1, 1, S, S), bool)
+        o = B.gqa_attend(q, k, v, mask)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+    x = x + shard_as(o, "batch", "act_seq", "embed_act")
+    return x, (k, v)
+
+
+def _attn_block_decode(cfg, p, x, cache_k, cache_v, pos):
+    h = _apply_norm(cfg, p["ln1"], x)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k_new, v_new = B.qkv_proj(p["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.rope_theta, positions)
+    q, k_new = _maybe_qk_norm(cfg, p["attn"], q, k_new)
+    T = cache_k.shape[1]
+    slot = pos % T
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), slot, axis=1)
+    valid = (jnp.arange(T) <= pos)[None, None, None, None, :]
+    o = B.gqa_attend(q, cache_k.astype(x.dtype), cache_v.astype(x.dtype),
+                     valid)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+    return x + o, (cache_k, cache_v)
+
+
+def _ffn_block(cfg, p, x):
+    h = _apply_norm(cfg, p["ln2"], x)
+    if cfg.family == "moe":
+        o, aux = B.moe_ffn(p["moe"], h, cfg.n_experts, cfg.top_k,
+                           cfg.capacity_factor)
+    else:
+        o, aux = B.mlp(p["mlp"], h, cfg.act), None
+    return x + shard_as(o, "batch", "act_seq", "embed_act"), aux
+
+
+def dense_layer(cfg, p, x, positions, mask=None):
+    x, kv = _attn_block(cfg, p, x, positions, mask)
+    x, aux = _ffn_block(cfg, p, x)
+    return x, kv, aux
+
+
+def ssm_layer(cfg, p, x):
+    h = _apply_norm(cfg, p["norm"], x)
+    o, _ = B.mamba2_forward(p["mamba"], h, cfg, chunk=cfg.ssd_chunk)
+    return x + shard_as(o, "batch", "act_seq", "embed_act")
+
+
+def ssm_layer_prefill(cfg, p, x):
+    h = _apply_norm(cfg, p["norm"], x)
+    o, state = B.mamba2_forward(p["mamba"], h, cfg, chunk=cfg.ssd_chunk,
+                                return_state=True)
+    return x + o, state
+
+
+def ssm_layer_decode(cfg, p, x, conv_state, ssm_state):
+    h = _apply_norm(cfg, p["norm"], x)
+    o, conv_state, ssm_state = B.mamba2_decode(p["mamba"], h, cfg,
+                                               conv_state, ssm_state)
+    return x + o, conv_state, ssm_state
+
+
+# --------------------------------------------------------------------------
+# full model: train-forward, prefill, decode
+# --------------------------------------------------------------------------
+def _embed(cfg, params, tokens, vis_embeds=None):
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    if cfg.family == "vlm":
+        assert vis_embeds is not None, "vlm needs patch embeddings"
+        v = vis_embeds.astype(cfg.dtype) @ params["vis_proj"].astype(cfg.dtype)
+        x = jnp.concatenate([v, x], axis=1)
+    return shard_as(x, "batch", "act_seq", "embed_act")
+
+
+def _logits(cfg, params, x):
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(cfg.dtype).T
+    else:
+        w = params["unembed"].astype(cfg.dtype)
+    logits = x @ w
+    return shard_as(logits, "batch", "seq", "vocab")
+
+
+def _scan_layers(cfg, layer_fn, x, stacked, collect=False):
+    fn = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+
+    def body(carry, p_l):
+        x, aux = carry
+        out = fn(p_l, x)
+        x_new, extra, aux_l = out
+        aux = aux + (aux_l if aux_l is not None else 0.0)
+        return (x_new, aux), (extra if collect else None)
+
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                stacked, unroll=cfg.scan_unroll)
+    return x, aux, ys
+
+
+
+def cast_params(cfg, params):
+    """One cast of the (sharded) param tree to the compute dtype BEFORE the
+    layer scan: XLA then all-gathers bf16, not f32 — halves FSDP gather
+    traffic. The in-block .astype() calls become no-ops. Gated on
+    cfg.cast_once so the §Perf baseline stays f32-gather."""
+    if not cfg.cast_once:
+        return params
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(cfg.dtype) if a.dtype == jnp.float32 else a,
+        params)
+
+def unembed_matrix(cfg, params):
+    """[D, V] output projection (tied or untied)."""
+    if cfg.tie_embeddings:
+        return params["embed"].astype(cfg.dtype).T
+    return params["unembed"].astype(cfg.dtype)
+
+
+def forward(cfg, params, tokens, vis_embeds=None, return_hidden=False):
+    """Training forward: tokens [B,S] -> logits [B,S(+vis),V], aux_loss.
+    ``return_hidden`` skips the unembedding and returns the final-normed
+    hidden states — the chunked-loss path never materializes [B,S,V]."""
+    params = cast_params(cfg, params)
+    x = _embed(cfg, params, tokens, vis_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    if cfg.family == "ssm":
+        def f(p_l, x):
+            return ssm_layer(cfg, p_l, x), None, None
+        x, aux, _ = _scan_layers(cfg, f, x, params["layers"])
+    elif cfg.family == "hybrid":
+        def g(p_g, x):
+            def f(p_l, x):
+                return ssm_layer(cfg, p_l, x), None, None
+            x, _, _ = _scan_layers(cfg, f, x, p_g)
+            x, _, _ = dense_layer(cfg, params["shared"], x, positions)
+            return x, None, None
+        x, aux, _ = _scan_layers(cfg, g, x, params["groups"])
+        if "tail" in params:
+            def f(p_l, x):
+                return ssm_layer(cfg, p_l, x), None, None
+            x, _, _ = _scan_layers(cfg, f, x, params["tail"])
+    else:
+        def f(p_l, x):
+            x, kv, aux = dense_layer(cfg, p_l, x, positions)
+            return x, None, aux
+        x, aux, _ = _scan_layers(cfg, f, x, params["layers"])
+
+    if return_hidden:
+        return _apply_norm(cfg, params["final_norm"], x), aux
+    return _logits(cfg, params, x), aux
+
+
+# ---- caches ---------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, dtype=None) -> dict:
+    """Decode caches, stacked on the layer axis for scan-decode."""
+    dtype = dtype or cfg.dtype
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim if cfg.ssm_state else 0
+    conv_dim = d_inner + 2 * cfg.ssm_state
+
+    def kv(n):
+        return {
+            "k": jnp.zeros((n, batch, max_len, K, hd), dtype),
+            "v": jnp.zeros((n, batch, max_len, K, hd), dtype),
+        }
+
+    def ssm(n):
+        return {
+            "conv": jnp.zeros((n, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+            "ssm": jnp.zeros((n, batch, H, cfg.ssm_head_dim, cfg.ssm_state),
+                             jnp.float32),
+        }
+
+    if cfg.family == "ssm":
+        return ssm(L)
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_attn_every
+        G = L // per
+        c = {"groups": jax.tree_util.tree_map(
+                lambda a: a.reshape((G, per) + a.shape[1:]), ssm(G * per)),
+             "shared": kv(G)}
+        rem = L - G * per
+        if rem:
+            c["tail"] = ssm(rem)
+        return c
+    return kv(L)
+
+
+def cache_abstract(cfg, batch: int, max_len: int, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+        jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype)),
+    )
+
+
+def prefill(cfg, params, tokens, max_len: int, vis_embeds=None):
+    """Full-sequence forward that also fills the decode cache.
+
+    Returns (logits, cache). Cache KV buffers are sized ``max_len``.
+    """
+    params = cast_params(cfg, params)
+    x = _embed(cfg, params, tokens, vis_embeds)
+    Bsz, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    pad = max_len - S
+
+    def pad_kv(k):
+        return jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    if cfg.family == "ssm":
+        def f(p_l, x):
+            x, st = ssm_layer_prefill(cfg, p_l, x)
+            return x, st, None
+        x, _, states = _scan_layers(cfg, f, x, params["layers"], collect=True)
+        cache = {"conv": states[0], "ssm": states[1]}
+    elif cfg.family == "hybrid":
+        def g(p_g, x):
+            def f(p_l, x):
+                x, st = ssm_layer_prefill(cfg, p_l, x)
+                return x, st, None
+            x, _, states = _scan_layers(cfg, f, x, p_g, collect=True)
+            x, kv, _ = dense_layer(cfg, params["shared"], x, positions)
+            return x, (states, (pad_kv(kv[0]), pad_kv(kv[1]))), None
+        x, _, ys = _scan_layers(cfg, g, x, params["groups"], collect=True)
+        states, kvs = ys
+        cache = {
+            "groups": {"conv": states[0], "ssm": states[1]},
+            "shared": {"k": kvs[0], "v": kvs[1]},
+        }
+        if "tail" in params:
+            def f(p_l, x):
+                x, st = ssm_layer_prefill(cfg, p_l, x)
+                return x, st, None
+            x, _, states = _scan_layers(cfg, f, x, params["tail"],
+                                        collect=True)
+            cache["tail"] = {"conv": states[0], "ssm": states[1]}
+    else:
+        def f(p_l, x):
+            x, kv, aux = dense_layer(cfg, p_l, x, positions)
+            return x, (pad_kv(kv[0]), pad_kv(kv[1])), aux
+        x, _, kvs = _scan_layers(cfg, f, x, params["layers"], collect=True)
+        cache = {"k": kvs[0], "v": kvs[1]}
+
+    return _logits(cfg, params, x[:, -1:]), cache
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    """One decode step. tokens [B,1]; pos scalar int32 (absolute position,
+    including any vis prefix). Returns (logits [B,1,V], new cache)."""
+    params = cast_params(cfg, params)
+    x = params["embed"].astype(cfg.dtype)[tokens]
+
+    if cfg.family == "ssm":
+        def f(x, inp):
+            p_l, c, s = inp
+            x, c2, s2 = ssm_layer_decode(cfg, p_l, x, c, s)
+            return x, (c2, s2)
+        x, (conv, ssm) = jax.lax.scan(
+            f, x, (params["layers"], cache["conv"], cache["ssm"]),
+            unroll=cfg.scan_unroll)
+        new_cache = {"conv": conv, "ssm": ssm}
+    elif cfg.family == "hybrid":
+        def g(x, inp):
+            p_g, cg, kvg = inp
+            def f(x, inp2):
+                p_l, c, s = inp2
+                x, c2, s2 = ssm_layer_decode(cfg, p_l, x, c, s)
+                return x, (c2, s2)
+            x, (conv, ssm) = jax.lax.scan(
+                f, x, (p_g, cg["conv"], cg["ssm"]),
+                unroll=cfg.scan_unroll)
+            x, (k2, v2) = _attn_block_decode(
+                cfg, params["shared"], x, kvg["k"], kvg["v"], pos)
+            x, _ = _ffn_block(
+                dataclasses.replace(cfg, family="dense"), params["shared"], x)
+            return x, ({"conv": conv, "ssm": ssm}, {"k": k2, "v": v2})
+        x, (groups, shared) = jax.lax.scan(
+            g, x, (params["groups"], cache["groups"], cache["shared"]),
+            unroll=cfg.scan_unroll)
+        new_cache = {"groups": groups, "shared": shared}
+        if "tail" in params:
+            def f(x, inp2):
+                p_l, c, s = inp2
+                x, c2, s2 = ssm_layer_decode(cfg, p_l, x, c, s)
+                return x, (c2, s2)
+            x, (conv, ssm) = jax.lax.scan(
+                f, x, (params["tail"], cache["tail"]["conv"],
+                       cache["tail"]["ssm"]), unroll=cfg.scan_unroll)
+            new_cache["tail"] = {"conv": conv, "ssm": ssm}
+    else:
+        def f(x, inp):
+            p_l, k, v = inp
+            x, (k2, v2) = _attn_block_decode(cfg, p_l, x, k, v, pos)
+            x, _ = _ffn_block(cfg, p_l, x)
+            return x, (k2, v2)
+        x, (k, v) = jax.lax.scan(
+            f, x, (params["layers"], cache["k"], cache["v"]),
+            unroll=cfg.scan_unroll)
+        new_cache = {"k": k, "v": v}
+
+    return _logits(cfg, params, x), new_cache

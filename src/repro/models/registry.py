@@ -1,0 +1,226 @@
+"""Architecture registry: name -> uniform model API.
+
+Every assigned architecture exposes the same surface so the launcher,
+dry-run, trainer and server are arch-agnostic:
+
+    api = get_model(cfg)
+    api.init(key) / api.abstract_params() / api.param_axes()
+    api.forward(params, batch)            -> (logits, aux)   # train path
+    api.prefill(params, batch, max_len)   -> (logits, cache)
+    api.decode(params, cache, tokens, pos)-> (logits, cache)
+    api.input_specs(shape)                -> {name: ShapeDtypeStruct}
+    api.count_params() / api.active_params()
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm, whisper
+from repro.models.lm import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+LM_SHAPES = [
+    ShapeSpec("train_4k", 4096, 256, "train"),
+    ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32768, 128, "decode"),
+    ShapeSpec("long_500k", 524288, 1, "decode"),
+]
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    abstract_params: Callable
+    param_axes: Callable
+    forward: Callable          # (params, batch) -> (logits, aux)
+    forward_hidden: Callable   # (params, batch) -> (hidden, aux)
+    unembed: Callable          # params -> [D, V]
+    prefill: Callable          # (params, batch, max_len) -> (logits, cache)
+    decode: Callable           # (params, cache, tokens, pos) -> (logits, cache)
+    init_cache: Callable       # (batch, max_len) -> cache
+    input_specs: Callable      # (ShapeSpec) -> {name: ShapeDtypeStruct}
+
+    def count_params(self) -> int:
+        ab = self.abstract_params()
+        return sum(int(np.prod(a.shape))
+                   for a in jax.tree_util.tree_leaves(ab))
+
+    def active_params(self) -> int:
+        """Per-token active parameters (MoE: only top-k experts)."""
+        cfg = self.cfg
+        total = self.count_params()
+        if cfg.family != "moe" or not cfg.n_experts:
+            return total
+        expert = 3 * cfg.d_model * cfg.d_ff  # gate/up/down per expert
+        inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * expert
+        return total - inactive
+
+
+def _vis_frames(cfg, spec: ShapeSpec) -> int:
+    if cfg.family == "encdec":
+        # stub frontend: frames after the conv stack; scale with tokens but
+        # cap at whisper's 30 s window equivalent
+        return min(1500, max(128, spec.seq_len // 2))
+    return cfg.n_vis_tokens
+
+
+def _lm_api(cfg: ModelConfig) -> ModelApi:
+    def forward(params, batch, return_hidden=False):
+        if cfg.family == "vlm":
+            return lm.forward(cfg, params, batch["tokens"],
+                              vis_embeds=batch["vis_embeds"],
+                              return_hidden=return_hidden)
+        return lm.forward(cfg, params, batch["tokens"],
+                          return_hidden=return_hidden)
+
+    def prefill(params, batch, max_len):
+        if cfg.family == "vlm":
+            return lm.prefill(cfg, params, batch["tokens"], max_len,
+                              vis_embeds=batch["vis_embeds"])
+        return lm.prefill(cfg, params, batch["tokens"], max_len)
+
+    def input_specs(spec: ShapeSpec):
+        B, S = spec.global_batch, spec.seq_len
+        i32 = jnp.int32
+        if spec.kind == "train":
+            out = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                   "labels": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.family == "vlm":
+                out["vis_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
+            return out
+        if spec.kind == "prefill":
+            out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.family == "vlm":
+                out["vis_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
+            return out
+        # decode: one new token against a cache of seq_len
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: lm.init_params(cfg, key),
+        abstract_params=lambda: lm.abstract_params(cfg),
+        param_axes=lambda: lm.param_axes(cfg),
+        forward=forward,
+        forward_hidden=lambda params, batch: forward(params, batch,
+                                                     return_hidden=True),
+        unembed=lambda params: lm.unembed_matrix(cfg, params),
+        prefill=prefill,
+        decode=lambda params, cache, tokens, pos: lm.decode_step(
+            cfg, params, cache, tokens, pos),
+        init_cache=lambda batch, max_len: lm.init_cache(cfg, batch, max_len),
+        input_specs=input_specs,
+    )
+
+
+def _whisper_api(cfg: ModelConfig) -> ModelApi:
+    def forward(params, batch, return_hidden=False):
+        return whisper.forward(cfg, params, batch["tokens"],
+                               batch["frames"], return_hidden=return_hidden)
+
+    def prefill(params, batch, max_len):
+        return whisper.prefill(cfg, params, batch["tokens"], batch["frames"],
+                               max_len)
+
+    def input_specs(spec: ShapeSpec):
+        B, S = spec.global_batch, spec.seq_len
+        nf = _vis_frames(cfg, spec)
+        i32 = jnp.int32
+        if spec.kind == "train":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+                "frames": jax.ShapeDtypeStruct((B, nf, cfg.d_model),
+                                               jnp.float32),
+            }
+        if spec.kind == "prefill":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "frames": jax.ShapeDtypeStruct((B, nf, cfg.d_model),
+                                               jnp.float32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: whisper.init_params(cfg, key),
+        abstract_params=lambda: whisper.abstract_params(cfg),
+        param_axes=lambda: whisper.param_axes(cfg),
+        forward=forward,
+        forward_hidden=lambda params, batch: forward(params, batch,
+                                                     return_hidden=True),
+        unembed=lambda params: whisper.unembed_matrix(cfg, params),
+        prefill=prefill,
+        decode=lambda params, cache, tokens, pos: whisper.decode_step(
+            cfg, params, cache, tokens, pos),
+        init_cache=lambda batch, max_len: whisper.init_cache(
+            cfg, batch, max_len, n_frames=1500),
+        input_specs=input_specs,
+    )
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family == "encdec":
+        return _whisper_api(cfg)
+    return _lm_api(cfg)
+
+
+# ---- config registry -------------------------------------------------------
+_CONFIGS: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _CONFIGS[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _CONFIGS:
+        _load_all()
+    return _CONFIGS[name]()
+
+
+def list_archs() -> list[str]:
+    _load_all()
+    return sorted(_CONFIGS)
+
+
+def _load_all():
+    import importlib
+    import pkgutil
+    import repro.configs as pkg
+
+    for m in pkgutil.iter_modules(pkg.__path__):
+        importlib.import_module(f"repro.configs.{m.name}")
+
+
+def shapes_for(cfg: ModelConfig) -> list[ShapeSpec]:
+    """The assigned shape cells applicable to this arch (long_500k only for
+    sub-quadratic families — skip documented in DESIGN.md)."""
+    out = []
+    for s in LM_SHAPES:
+        if s.name == "long_500k" and not cfg.sub_quadratic:
+            continue
+        out.append(s)
+    return out

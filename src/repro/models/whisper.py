@@ -1,0 +1,226 @@
+"""Whisper-style encoder-decoder (whisper-tiny backbone).
+
+Per the assignment, the conv/audio frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings [B, S_frames, D] (what the two conv
+layers would emit); a trained linear adapter maps them into the encoder.
+Positions are sinusoidal (no learned table ⇒ any sequence length lowers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.blocks import ParamSpec
+from repro.models.lm import ModelConfig, _apply_norm, _norm_specs, stack_specs
+from repro.sharding.policy import shard_as
+
+
+def sinusoid_pos(S: int, D: int, offset=0):
+    pos = (jnp.arange(S) + offset)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, D, 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, dim / D)
+    pe = jnp.zeros((S, D), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+def _enc_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": _norm_specs(cfg),
+        "attn": B.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.hd, cfg.qkv_bias),
+        "ln2": _norm_specs(cfg),
+        "mlp": B.mlp_specs(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _dec_layer_specs(cfg: ModelConfig) -> dict:
+    s = _enc_layer_specs(cfg)
+    s["ln_x"] = _norm_specs(cfg)
+    s["xattn"] = B.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.hd, cfg.qkv_bias)
+    return s
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+        "frame_proj": ParamSpec((cfg.d_model, cfg.d_model),
+                                ("embed", "embed_act"), "small"),
+        "enc_layers": stack_specs(_enc_layer_specs(cfg), cfg.n_enc_layers),
+        "enc_norm": _norm_specs(cfg),
+        "dec_layers": stack_specs(_dec_layer_specs(cfg), cfg.n_layers),
+        "final_norm": _norm_specs(cfg),
+    }
+
+
+def init_params(cfg, key):
+    return B.build_params(key, model_specs(cfg))
+
+
+def abstract_params(cfg):
+    return B.abstract_params(model_specs(cfg))
+
+
+def param_axes(cfg):
+    return B.spec_axes(model_specs(cfg))
+
+
+def _self_attn(cfg, p, pfx, x, positions, mask, causal=False):
+    q, k, v = B.qkv_proj(p["attn"], x, cfg.n_heads, cfg.n_kv_heads, None,
+                         positions)
+    if x.shape[1] >= 8192:
+        o = B.blockwise_gqa_attend(q, k, v, causal=causal)
+    else:
+        o = B.gqa_attend(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", o,
+                      p["attn"]["wo"].astype(x.dtype)), (k, v)
+
+
+def encode(cfg, params, frames):
+    dt = cfg.dtype
+    x = frames.astype(dt) @ params["frame_proj"].astype(dt)
+    x = x + sinusoid_pos(x.shape[1], cfg.d_model).astype(dt)[None]
+    x = shard_as(x, "batch", "act_seq", "embed_act")
+    S = x.shape[1]
+    full = jnp.ones((1, 1, 1, S, S), bool)
+    positions = jnp.arange(S)[None, :]
+
+    def layer(p_l, x):
+        h = _apply_norm(cfg, p_l["ln1"], x)
+        o, _ = _self_attn(cfg, p_l, "", h, positions, full)
+        x = x + o
+        h = _apply_norm(cfg, p_l["ln2"], x)
+        return x + B.mlp(p_l["mlp"], h, cfg.act)
+
+    fn = jax.checkpoint(layer) if cfg.remat else layer
+
+    def body(x, p_l):
+        return fn(p_l, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                        unroll=cfg.scan_unroll)
+    return _apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_layer(cfg, p_l, x, enc_out, positions, self_mask):
+    h = _apply_norm(cfg, p_l["ln1"], x)
+    o, kv = _self_attn(cfg, p_l, "", h, positions, self_mask, causal=True)
+    x = x + o
+    h = _apply_norm(cfg, p_l["ln_x"], x)
+    ckv = B.cross_kv(p_l["xattn"], enc_out)
+    x = x + B.cross_attention(p_l["xattn"], h, ckv)
+    h = _apply_norm(cfg, p_l["ln2"], x)
+    return x + B.mlp(p_l["mlp"], h, cfg.act), kv, ckv
+
+
+def unembed_matrix(cfg, params):
+    return params["embed"].astype(cfg.dtype).T
+
+
+def forward(cfg, params, tokens, frames, return_hidden=False):
+    """Training forward. Returns (logits [B,St,V], aux=None)."""
+    from repro.models.lm import cast_params
+    params = cast_params(cfg, params)
+    enc_out = encode(cfg, params, frames)
+    dt = cfg.dtype
+    y = params["embed"].astype(dt)[tokens]
+    y = y + sinusoid_pos(y.shape[1], cfg.d_model).astype(dt)[None]
+    y = shard_as(y, "batch", "act_seq", "embed_act")
+    St = y.shape[1]
+    positions = jnp.arange(St)[None, :]
+    mask = B.causal_mask(St, St)
+
+    def layer(p_l, y):
+        y, _, _ = _dec_layer(cfg, p_l, y, enc_out, positions, mask)
+        return y
+
+    fn = jax.checkpoint(layer) if cfg.remat else layer
+
+    def body(y, p_l):
+        return fn(p_l, y), None
+
+    y, _ = jax.lax.scan(body, y, params["dec_layers"],
+                        unroll=cfg.scan_unroll)
+    y = _apply_norm(cfg, params["final_norm"], y)
+    if return_hidden:
+        return y, None
+    logits = y @ params["embed"].astype(dt).T
+    return shard_as(logits, "batch", "seq", "vocab"), None
+
+
+def init_cache(cfg, batch: int, max_len: int, n_frames: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((L, batch, max_len, K, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, K, hd), dtype),
+        "xk": jnp.zeros((L, batch, n_frames, K, hd), dtype),
+        "xv": jnp.zeros((L, batch, n_frames, K, hd), dtype),
+    }
+
+
+def prefill(cfg, params, tokens, frames, max_len: int):
+    from repro.models.lm import cast_params
+    params = cast_params(cfg, params)
+    enc_out = encode(cfg, params, frames)
+    dt = cfg.dtype
+    y = params["embed"].astype(dt)[tokens]
+    y = y + sinusoid_pos(y.shape[1], cfg.d_model).astype(dt)[None]
+    St = y.shape[1]
+    positions = jnp.arange(St)[None, :]
+    mask = B.causal_mask(St, St)
+    pad = max_len - St
+
+    def body(y, p_l):
+        y, kv, ckv = _dec_layer(cfg, p_l, y, enc_out, positions, mask)
+        k = jnp.pad(kv[0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(kv[1], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return y, (k, v, ckv[0], ckv[1])
+
+    y, ys = jax.lax.scan(body, y, params["dec_layers"],
+                         unroll=cfg.scan_unroll)
+    y = _apply_norm(cfg, params["final_norm"], y[:, -1:])
+    logits = y @ params["embed"].astype(dt).T
+    return logits, {"k": ys[0], "v": ys[1], "xk": ys[2], "xv": ys[3]}
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    from repro.models.lm import cast_params
+    params = cast_params(cfg, params)
+    dt = cfg.dtype
+    y = params["embed"].astype(dt)[tokens]
+    y = y + sinusoid_pos(1, cfg.d_model, offset=pos).astype(dt)[None]
+
+    def body(y, inp):
+        p_l, k, v, xk, xv = inp
+        h = _apply_norm(cfg, p_l["ln1"], y)
+        q, k_new, v_new = B.qkv_proj(p_l["attn"], h, cfg.n_heads,
+                                     cfg.n_kv_heads, None, None)
+        T = k.shape[1]
+        slot = pos % T
+        k = jax.lax.dynamic_update_slice_in_dim(
+            k, k_new.astype(k.dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            v, v_new.astype(v.dtype), slot, axis=1)
+        valid = (jnp.arange(T) <= pos)[None, None, None, None, :]
+        o = B.gqa_attend(q, k.astype(dt), v.astype(dt), valid)
+        y = y + jnp.einsum("bshk,hkd->bsd", o, p_l["attn"]["wo"].astype(dt))
+        h = _apply_norm(cfg, p_l["ln_x"], y)
+        y = y + B.cross_attention(p_l["xattn"], h,
+                                  (xk.astype(dt), xv.astype(dt)))
+        h = _apply_norm(cfg, p_l["ln2"], y)
+        y = y + B.mlp(p_l["mlp"], h, cfg.act)
+        return y, (k, v)
+
+    y, (k, v) = jax.lax.scan(
+        body, y, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]), unroll=cfg.scan_unroll)
+    y = _apply_norm(cfg, params["final_norm"], y)
+    logits = y @ params["embed"].astype(dt).T
+    return logits, {"k": k, "v": v, "xk": cache["xk"], "xv": cache["xv"]}

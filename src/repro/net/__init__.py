@@ -1,0 +1,8 @@
+from repro.net.topology import (  # noqa: F401
+    Link,
+    LinkKind,
+    Topology,
+    big_switch,
+    fat_tree,
+    tpu_pod_fabric,
+)

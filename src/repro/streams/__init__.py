@@ -1,0 +1,24 @@
+from repro.streams.app import (  # noqa: F401
+    Edge,
+    Grouping,
+    InstanceGraph,
+    Operator,
+    StreamApp,
+    parallelize,
+    source_sink_paths,
+)
+from repro.streams.placement import STRATEGIES, round_robin, packed, traffic_aware  # noqa: F401
+from repro.streams.simulator import (  # noqa: F401
+    CompiledSim,
+    SimResult,
+    compile_sim,
+    simulate,
+)
+from repro.streams.workloads import (  # noqa: F401
+    PAPER_CAPS_MBPS,
+    WORKLOADS,
+    linkedin_tags,
+    motivation_chain,
+    trending_topics,
+    trucking_iot,
+)

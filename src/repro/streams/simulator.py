@@ -1,0 +1,377 @@
+"""Discrete-time fluid simulation of a distributed stream application over a
+bandwidth-constrained fabric (reproduces the paper's testbed, §VI).
+
+Each tick (``dt`` seconds):
+  1. network transfer: every flow moves min(Q_s, x_f·dt) MB from its sender
+     queue to its receiver queue — x is the policy's rate vector (TCP max-min,
+     the paper's App-aware Alg. 1, App-Fair, or a fixed vector for the
+     brute-force motivation study);
+  2. processing: each instance consumes from its receiver queues — *join*
+     instances advance in lock-step with their proportional inputs (a starved
+     input stalls the join: the paper's core phenomenon), others consume
+     work-conserving up to proc_rate;
+  3. emission: consumed MB × selectivity is split over outgoing flows per the
+     grouping weights; sources additionally generate gen_rate·dt.
+
+The whole run is one `jax.lax.scan`, jitted; policies recompute rates inside
+the scan (TCP every tick — idealized instant congestion control; App-aware
+every Δt, matching the paper's 5 s controller interval).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocator import LinkProgram, allocate
+from repro.core.flowstate import FlowState
+from repro.core.multiapp import (
+    ewma_throughput,
+    group_by_throughput,
+    strict_priority_alloc,
+)
+from repro.core.tcp import demand_limited_maxmin
+from repro.net.topology import Topology
+from repro.streams.app import InstanceGraph, source_sink_paths
+
+_EPS = 1e-9
+INTERNAL_RATE = 1e6  # MB/s: same-machine flows move at memory speed
+_LAT_CAP = 1e4       # s: cap on per-flow latency contribution (stalled flows)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    meta_fields=("tuples_per_mb", "n_apps"),
+    data_fields=(
+        "R", "caps", "kinds", "has_links", "M_in", "w_out", "p_in",
+        "proc_rate", "selectivity", "gen_rate", "is_join", "is_sink",
+        "join_dst", "droppable", "dst_of_flow", "paths", "app_of_flow",
+        "app_of_inst",
+    ),
+)
+@dataclasses.dataclass
+class CompiledSim:
+    """Structure of one simulation (pytree: arrays data, scalars static)."""
+
+    # network
+    R: Any               # [F, L]
+    caps: Any            # [L]
+    kinds: Any           # [L]
+    has_links: Any       # [F] bool
+    # dataflow
+    M_in: Any            # [I, F] flow f ends at instance i
+    w_out: Any           # [I, F] share of inst output onto flow
+    p_in: Any            # [F] proportion of dst's input expected on flow
+    proc_rate: Any       # [I]
+    selectivity: Any     # [I]
+    gen_rate: Any        # [I]
+    is_join: Any         # [I] bool
+    is_sink: Any         # [I] bool
+    join_dst: Any        # [F] bool: flow terminates at a join instance
+    droppable: Any       # [F] bool: stale excess is discarded at the join
+    dst_of_flow: Any     # [F]
+    paths: Any           # [P, F]
+    tuples_per_mb: float
+    app_of_flow: Any     # [F] int
+    app_of_inst: Any     # [I] int
+    n_apps: int
+
+    @property
+    def program(self) -> LinkProgram:
+        return LinkProgram(R=self.R, capacity=self.caps, kind=self.kinds)
+
+
+def compile_sim(
+    graph: InstanceGraph,
+    topo: Topology,
+    machine_of_inst: np.ndarray,
+    app_of_inst: np.ndarray | None = None,
+    n_apps: int = 1,
+) -> CompiledSim:
+    flows = graph.flow_pairs(machine_of_inst)
+    R = topo.routing_matrix(flows)
+    M_in = graph.in_matrix()
+    # steady-state volumes -> expected input proportions per dst instance,
+    # with semantic `join_share` overrides (paper's TI: the join consumes the
+    # congestion stream at its *useful* rate, not its volume-average rate)
+    from repro.streams.placement import _steady_state_flow_volume
+
+    vol = _steady_state_flow_volume(graph) + 1e-12
+    edges = graph.app.edges
+    share = np.array(
+        [edges[e].join_share if edges[e].join_share is not None else np.nan
+         for e in graph.edge_of_flow]
+    )
+    p_in = np.zeros(graph.n_flows)
+    for i in range(graph.n_instances):
+        sel = graph.dst_of_flow == i
+        if not sel.any():
+            continue
+        ov = sel & ~np.isnan(share)
+        free = sel & np.isnan(share)
+        # overridden edges: edge share split within the edge by volume
+        used = 0.0
+        for e in np.unique(graph.edge_of_flow[ov]):
+            fe = ov & (graph.edge_of_flow == e)
+            p_in[fe] = edges[e].join_share * vol[fe] / vol[fe].sum()
+            used += edges[e].join_share
+        if free.any():
+            p_in[free] = max(1.0 - used, 0.0) * vol[free] / vol[free].sum()
+        s = p_in[sel].sum()
+        if s > 0:
+            p_in[sel] /= s
+    droppable = np.array([edges[e].droppable for e in graph.edge_of_flow])
+    app_of_inst = (
+        np.zeros(graph.n_instances, np.int32) if app_of_inst is None else app_of_inst
+    )
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    return CompiledSim(
+        R=f32(R),
+        caps=f32(topo.capacities),
+        kinds=jnp.asarray(topo.link_kinds),
+        has_links=jnp.asarray(R.sum(1) > 0),
+        M_in=f32(M_in),
+        w_out=f32(graph.w_out),
+        p_in=f32(p_in),
+        proc_rate=f32(np.minimum(graph.proc_rate, 1e9)),
+        selectivity=f32(graph.selectivity),
+        gen_rate=f32(graph.gen_rate),
+        is_join=jnp.asarray(graph.is_join),
+        is_sink=jnp.asarray(graph.is_sink),
+        join_dst=jnp.asarray(graph.is_join[graph.dst_of_flow]),
+        droppable=jnp.asarray(droppable),
+        dst_of_flow=jnp.asarray(graph.dst_of_flow),
+        paths=f32(source_sink_paths(graph)),
+        tuples_per_mb=float(graph.app.tuples_per_mb),
+        app_of_flow=jnp.asarray(app_of_inst[graph.dst_of_flow], jnp.int32),
+        app_of_inst=jnp.asarray(app_of_inst, jnp.int32),
+        n_apps=int(n_apps),
+    )
+
+
+# --------------------------------------------------------------------------
+# one simulation tick (shared by all policies)
+# --------------------------------------------------------------------------
+def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap):
+    # receiver-window flow control: never overflow the receive buffer
+    transfer = jnp.minimum(jnp.minimum(Qs, x * dt),
+                           jnp.maximum(qcap - Qr, 0.0))
+    Qs = Qs - transfer
+    Qr = Qr + transfer
+
+    # --- processing ---------------------------------------------------
+    ratio = Qr / jnp.maximum(sim.p_in, _EPS)                     # [F]
+    masked = jnp.where(sim.M_in > 0, ratio[None, :], jnp.inf)    # [I, F]
+    join_amt = jnp.min(masked, axis=1)                           # [I]
+    join_amt = jnp.where(jnp.isfinite(join_amt), join_amt, 0.0)
+    join_amt = jnp.minimum(join_amt, sim.proc_rate * dt)
+    consume_join = join_amt[sim.dst_of_flow] * sim.p_in          # [F]
+
+    total_in = sim.M_in @ Qr                                     # [I]
+    amt = jnp.minimum(total_in, sim.proc_rate * dt)
+    frac = amt / jnp.maximum(total_in, _EPS)
+    consume_any = Qr * frac[sim.dst_of_flow]
+
+    consume = jnp.where(sim.join_dst, consume_join, consume_any)
+    consume = jnp.minimum(consume, Qr)
+
+    # sender-side backpressure (Storm's bounded send buffers): an instance
+    # whose outgoing queue is full stalls its processing / generation
+    in_i = sim.M_in @ consume                                    # [I]
+    out_i = sim.selectivity * in_i + sim.gen_rate * dt
+    prod = sim.w_out.T @ out_i                                   # [F]
+    space = jnp.maximum(qcap - Qs, 0.0)
+    scale_f = jnp.clip(space / jnp.maximum(prod, _EPS), 0.0, 1.0)
+    # droppable (latest-value) streams never backpressure upstream: the app
+    # overwrites stale records in its send queue instead of blocking
+    stalled = jnp.where((sim.w_out > 0) & ~sim.droppable[None, :],
+                        scale_f[None, :], jnp.inf)
+    stall_i = jnp.min(stalled, axis=1)                           # [I]
+    stall_i = jnp.where(jnp.isfinite(stall_i), stall_i, 1.0)
+
+    consume = consume * stall_i[sim.dst_of_flow]
+    Qr = Qr - consume
+    # stale-data discard: droppable join inputs keep only a small working
+    # window; bytes beyond it were carried by the network for nothing.
+    Qr = jnp.where(sim.droppable, jnp.minimum(Qr, 0.5), Qr)
+    in_i = sim.M_in @ consume
+    out_i = sim.selectivity * in_i + sim.gen_rate * dt * stall_i
+    Qs = Qs + sim.w_out.T @ out_i
+    # latest-value send queues hold only the freshest working window
+    Qs = jnp.where(sim.droppable, jnp.minimum(Qs, 0.5), Qs)
+
+    sink_mb = jnp.sum(jnp.where(sim.is_sink, in_i, 0.0))
+    sink_mb_app = jax.ops.segment_sum(
+        jnp.where(sim.is_sink, in_i, 0.0), sim.app_of_inst, num_segments=sim.n_apps
+    )
+    drain = consume / dt                                         # [F] MB/s
+
+    # --- latency estimate (per source→sink path) ----------------------
+    wait = jnp.minimum(
+        Qs / jnp.maximum(x, _EPS) + Qr / jnp.maximum(drain, _EPS), _LAT_CAP
+    )
+    path_lat = sim.paths @ wait                                  # [P]
+    latency = jnp.mean(path_lat)
+
+    link_load = transfer @ sim.R / dt                            # [L] MB/s
+    return Qs, Qr, transfer, drain, (sink_mb, sink_mb_app, latency, link_load)
+
+
+# --------------------------------------------------------------------------
+# policies
+# --------------------------------------------------------------------------
+def _tcp_rates(sim: CompiledSim, Qs, Qr, prod_rate, drain_ewma, dt, qcap):
+    # sender-side demand, clamped by the receiver window (rwnd): a flow whose
+    # receive buffer is full only demands its drain rate — real TCP frees the
+    # bottleneck for other flows exactly this way.
+    send = Qs / dt + prod_rate
+    rwnd = jnp.maximum(qcap - Qr, 0.0) / dt + drain_ewma
+    demand = jnp.minimum(send, rwnd)
+    x = demand_limited_maxmin(sim.R, sim.caps, demand)
+    return jnp.where(sim.has_links, jnp.minimum(x, demand), INTERNAL_RATE)
+
+
+def _appaware_rates(sim: CompiledSim, state: FlowState, dt_alloc, backfill_iters=8):
+    x = allocate(sim.program, state, dt=dt_alloc, backfill_iters=backfill_iters)
+    return jnp.where(sim.has_links, x, INTERNAL_RATE)
+
+
+@dataclasses.dataclass
+class SimResult:
+    sink_mb: np.ndarray        # [T]
+    sink_mb_app: np.ndarray    # [T, A]
+    latency: np.ndarray        # [T]
+    link_load: np.ndarray      # [T, L]
+    caps: np.ndarray           # [L]
+    kinds: np.ndarray          # [L]
+    tuples_per_mb: float
+    dt: float
+
+    def _warm(self, arr):
+        return arr[arr.shape[0] // 4:]
+
+    @property
+    def throughput_tps(self) -> float:
+        """App throughput: completed tuples/s at the sinks (post-warmup)."""
+        return float(self._warm(self.sink_mb).mean() / self.dt * self.tuples_per_mb)
+
+    @property
+    def throughput_tps_per_app(self) -> np.ndarray:
+        return np.asarray(
+            self._warm(self.sink_mb_app).mean(0) / self.dt * self.tuples_per_mb
+        )
+
+    @property
+    def avg_latency_s(self) -> float:
+        return float(self._warm(self.latency).mean())
+
+    def bottleneck_utilization(self, threshold: float = 0.5) -> float:
+        """Avg utilization over bottlenecked links — links carrying ≥
+        ``threshold`` of their capacity (paper Fig. 12 'average link
+        throughput over all bottlenecked links')."""
+        load = self._warm(self.link_load).mean(0)
+        util = load / np.maximum(self.caps, _EPS)
+        hot = util >= threshold
+        if not hot.any():
+            hot = util >= util.max() * 0.999
+        return float(util[hot].mean())
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "n_ticks", "dt", "upd_every",
+                     "alpha", "n_groups"),
+)
+def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
+         upd_every: int, x_fixed=None, alpha: float = 0.5, n_groups: int = 8,
+         qcap: float = 8.0):
+    F = sim.R.shape[0]
+    z = jnp.zeros((F,), jnp.float32)
+
+    def policy_rates(Qs, Qr, B, prod_rate, drain_ewma, v_acc, ls, lr, mu):
+        if policy == "tcp":
+            return _tcp_rates(sim, Qs, Qr, prod_rate, drain_ewma, dt, qcap)
+        if policy == "fixed":
+            return jnp.where(sim.has_links, x_fixed, INTERNAL_RATE)
+        if policy == "appaware":
+            # the application profiler reports the *useful* receiver backlog
+            # B (bytes transferred but not yet joined — stale drops still
+            # count as backlog: the paper's memory-overrun signal, Fig. 5)
+            st = FlowState(ls_t=ls, lr_t=lr, v=v_acc, ls_t1=Qs, lr_t1=B)
+            return _appaware_rates(sim, st, dt * upd_every)
+        if policy == "appfair":
+            prio = group_by_throughput(mu, n_groups)
+            x = strict_priority_alloc(
+                sim.R, sim.caps, sim.app_of_flow, prio, n_groups=n_groups
+            )
+            return jnp.where(sim.has_links, x, INTERNAL_RATE)
+        raise ValueError(policy)
+
+    def body(carry, tick):
+        (Qs, Qr, B, x, v_acc, ls, lr, prod_rate, drain_ewma, mu,
+         mu_acc) = carry
+        do_upd = (tick % upd_every) == 0
+
+        def updated(_):
+            mu_new = ewma_throughput(mu, mu_acc / (dt * upd_every), alpha)
+            x_new = policy_rates(Qs, Qr, B, prod_rate, drain_ewma, v_acc,
+                                 ls, lr, mu_new)
+            return x_new, z, Qs, B, mu_new, jnp.zeros_like(mu_acc)
+
+        def kept(_):
+            return x, v_acc, ls, lr, mu, mu_acc
+
+        x, v_acc, ls, lr, mu, mu_acc = jax.lax.cond(do_upd, updated, kept, None)
+
+        Qs1, Qr1, transfer, drain, (sink, sink_app, lat, load) = _tick(
+            sim, Qs, Qr, x, dt, qcap)
+        prod_rate = (sim.w_out.T @ (sim.selectivity * (sim.M_in @ transfer)
+                                    + sim.gen_rate * dt)) / dt
+        drain_ewma = 0.5 * drain_ewma + 0.5 * drain
+        B1 = jnp.clip(B + transfer - drain * dt, 0.0, 8.0 * qcap)
+        return (
+            (Qs1, Qr1, B1, x, v_acc + transfer, ls, lr, prod_rate,
+             drain_ewma, mu, mu_acc + sink_app),
+            (sink, sink_app, lat, load),
+        )
+
+    mu0 = jnp.zeros((sim.n_apps,), jnp.float32)
+    carry0 = (z, z, z, z, z, z, z, z, z, mu0, mu0)
+    _, ys = jax.lax.scan(body, carry0, jnp.arange(n_ticks))
+    return ys
+
+
+def simulate(
+    sim: CompiledSim,
+    policy: str = "tcp",
+    seconds: float = 600.0,
+    dt: float = 0.5,
+    upd_every: int | None = None,
+    x_fixed=None,
+    alpha: float = 0.5,
+    n_groups: int = 8,
+    qcap: float = 8.0,
+) -> SimResult:
+    """Run one experiment (paper §VI: 600 s runs, Δt = 5 s allocator)."""
+    n_ticks = int(round(seconds / dt))
+    if upd_every is None:
+        upd_every = int(round(5.0 / dt)) if policy in ("appaware", "appfair") else 1
+    sink, sink_app, lat, load = _run(
+        sim, policy, n_ticks, dt, upd_every,
+        x_fixed=None if x_fixed is None else jnp.asarray(x_fixed, jnp.float32),
+        alpha=alpha, n_groups=n_groups, qcap=qcap,
+    )
+    return SimResult(
+        sink_mb=np.asarray(sink),
+        sink_mb_app=np.asarray(sink_app),
+        latency=np.asarray(lat),
+        link_load=np.asarray(load),
+        caps=np.asarray(sim.caps),
+        kinds=np.asarray(sim.kinds),
+        tuples_per_mb=sim.tuples_per_mb,
+        dt=dt,
+    )

@@ -1,0 +1,2 @@
+from repro.train.optim import AdamW, AdamState, apply_updates, warmup_cosine  # noqa: F401
+from repro.train.step import make_loss_fn, make_train_step, softmax_xent  # noqa: F401

@@ -1,0 +1,89 @@
+"""Gradient compression for cross-pod (DCN) traffic.
+
+Two composable schemes:
+  * top-k sparsification with error feedback (EF-SGD): only the largest
+    |g| fraction crosses the slow axis; the residual accumulates locally
+    and is re-injected next step (provably convergent);
+  * int8 quantization: per-tensor max-abs scaling (8× over f32 on the wire,
+    4× over bf16).
+
+These are grad_transform hooks for ``make_train_step``; the simulated
+bytes-on-wire reduction feeds the collective roofline term (§Perf) and the
+paper-allocator's DCN flow weights.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ int8
+def quantize_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def int8_roundtrip(tree):
+    """Simulates an int8-compressed collective payload: quantize/dequantize
+    every leaf. On real DCN hardware the int8 buffer is what crosses pods."""
+    def f(x):
+        q, s = quantize_int8(x)
+        return dequantize_int8(q, s).astype(x.dtype)
+    return jax.tree_util.tree_map(f, tree)
+
+
+# ---------------------------------------------------------------- top-k EF
+class EFState(NamedTuple):
+    error: Any  # residual tree
+
+
+def ef_init(params) -> EFState:
+    return EFState(error=jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def topk_ef_transform(grads, state: EFState, fraction: float = 0.01):
+    """Keep the top-``fraction`` of |g + err| per leaf; the rest becomes the
+    next step's error. Returns (sparse_grads, new_state)."""
+    def f(g, e):
+        ge = g + e
+        flat = jnp.abs(ge.reshape(-1))
+        k = max(int(flat.shape[0] * fraction), 1)
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        mask = (jnp.abs(ge) >= thresh).astype(ge.dtype)
+        kept = ge * mask
+        return kept, ge - kept
+
+    flat = jax.tree_util.tree_map(f, grads, state.error)
+    kept = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    return kept, EFState(error=err)
+
+
+def compressed_bytes_ratio(fraction: float, index_bits: int = 32,
+                           value_bits: int = 16) -> float:
+    """Wire-bytes ratio of top-k EF vs dense bf16 (for the roofline model):
+    each kept value ships (index, value)."""
+    dense_bits = 16.0
+    sparse_bits = fraction * (index_bits + value_bits)
+    return sparse_bits / dense_bits
+
+
+def make_dcn_compressor(fraction: float = 0.01, int8: bool = True):
+    """grad_transform factory for make_train_step: top-k EF (+ int8 payload
+    simulation). State is threaded via closure-captured mutation-free usage:
+    returns (init_state, transform(grads, state) -> (grads, state))."""
+    def transform(grads, state: EFState):
+        kept, state = topk_ef_transform(grads, state, fraction)
+        if int8:
+            kept = int8_roundtrip(kept)
+        return kept, state
+    return ef_init, transform

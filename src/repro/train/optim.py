@@ -1,0 +1,89 @@
+"""Optimizers & schedules — self-contained (no optax in this container).
+
+AdamW with decoupled weight decay, global-norm clipping, and warmup+cosine
+schedule. States mirror the param tree (same shapes ⇒ same shardings), so
+FSDP sharding of the optimizer comes for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant(lr_value: float) -> Callable:
+    return lambda step: jnp.asarray(lr_value, jnp.float32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def init(self, params) -> AdamState:
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return AdamState(step=jnp.zeros((), jnp.int32), m=z,
+                         v=jax.tree_util.tree_map(jnp.zeros_like, params))
+
+    def update(self, grads, state: AdamState, params):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        else:
+            gn = global_norm(grads)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state.v, grads)
+        t = step.astype(jnp.float32)
+        mc = 1 - b1 ** t
+        vc = 1 - b2 ** t
+        lr = self._lr(step)
+
+        def upd(m_, v_, p):
+            u = (m_ / mc) / (jnp.sqrt(v_ / vc) + self.eps)
+            return -lr * (u + self.weight_decay * p)
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, AdamState(step=step, m=m, v=v), gn
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)

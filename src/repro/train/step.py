@@ -1,0 +1,152 @@
+"""Loss and train-step factories (arch-agnostic via the ModelApi)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelApi
+from repro.train import optim as O
+
+
+def softmax_xent(logits, labels, z_loss: float = 0.0):
+    """Mean cross-entropy in f32. labels: int32, -1 = masked."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_softmax_xent(hidden, w_unembed, labels, chunk: int = 512,
+                         z_loss: float = 0.0, unroll: bool = False):
+    """Cross-entropy without materializing [B,S,V]: scan over sequence
+    chunks; each chunk's logits are rematerialized in backward
+    (jax.checkpoint), so peak memory is [B,chunk,V]."""
+    Bsz, S, D = hidden.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    h = hidden.reshape(Bsz, nc, chunk, D).swapaxes(0, 1)
+    y = labels.reshape(Bsz, nc, chunk).swapaxes(0, 1)
+
+    from repro.sharding.policy import shard_as
+
+    @jax.checkpoint
+    def chunk_loss(h_c, y_c):
+        logits = (h_c @ w_unembed).astype(jnp.float32)
+        logits = shard_as(logits, "batch", "act_seq", "vocab")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(y_c, 0)[..., None], axis=-1)[..., 0]
+        nll = lse - ll
+        if z_loss:
+            nll = nll + z_loss * jnp.square(lse)
+        mask = (y_c >= 0).astype(jnp.float32)
+        return jnp.sum(nll * mask), jnp.sum(mask)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        s, c = chunk_loss(*inp)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (h, y), unroll=unroll)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_loss_fn(api: ModelApi, aux_weight: float = 0.01,
+                 z_loss: float = 0.0, loss_unroll: bool = False):
+    cfg = api.cfg
+
+    def loss_fn(params, batch):
+        hidden, aux = api.forward_hidden(params, batch)
+        if cfg.family == "vlm":
+            # vision-prefix positions carry no token loss
+            hidden = hidden[:, cfg.n_vis_tokens:]
+        w = api.unembed(params)
+        loss = chunked_softmax_xent(hidden, w, batch["labels"],
+                                    z_loss=z_loss, unroll=loss_unroll)
+        metrics = {"xent": loss}
+        if aux is not None:
+            loss = loss + aux_weight * aux
+            metrics["moe_aux"] = aux
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(api: ModelApi, optimizer: O.AdamW,
+                    microbatches: int = 1, grad_transform=None,
+                    aux_weight: float = 0.01, loss_unroll: bool = False,
+                    constrain_grads: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``microbatches`` > 1 accumulates gradients over equal splits
+    of the batch (sequential scan — memory-bounded pipelines).
+    ``grad_transform(grads) -> grads`` hooks in compression (top-k EF, int8).
+    ``constrain_grads`` pins gradient shardings to the parameter shardings
+    (steers XLA toward reduce-scatter instead of all-reduce+slice on the
+    FSDP axis)."""
+    loss_fn = make_loss_fn(api, aux_weight, loss_unroll=loss_unroll)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    from repro.sharding.policy import shard_as
+
+    def _is_axes(x):
+        return isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        if constrain_grads:
+            grads = jax.tree_util.tree_map(
+                lambda ax, g: shard_as(g, *ax), api.param_axes(), grads,
+                is_leaf=_is_axes)
+        return grads, metrics
+
+    def accumulate(params, batch):
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+
+        mb = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, b):
+            acc, _ = carry
+            grads, metrics = single(params, b)
+            metrics = {k: metrics[k] for k in ("xent", "loss")}
+            acc = jax.tree_util.tree_map(jnp.add, acc, grads)
+            return (acc, metrics), None
+
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        (grads, metrics), _ = jax.lax.scan(
+            body, (zeros, _zero_metrics()), mb)
+        grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            grads, metrics = accumulate(params, batch)
+        else:
+            grads, metrics = single(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        updates, opt_state, gnorm = optimizer.update(grads, opt_state, params)
+        params = O.apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def _zero_metrics():
+    z = jnp.zeros((), jnp.float32)
+    return {"xent": z, "loss": z}

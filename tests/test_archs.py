@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests (assignment requirement): each of the ten
+assigned archs is instantiated at a REDUCED same-family config and runs one
+forward + one train step on CPU, asserting output shapes and finiteness.
+Also checks prefill+decode consistency against the full forward (teacher
+forcing) on representative families."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import SyntheticLM
+from repro.models.registry import get_config, get_model, list_archs
+from repro.train.optim import AdamW
+from repro.train.step import make_train_step
+
+ARCHS = [
+    "internvl2-1b", "dbrx-132b", "qwen3-moe-235b-a22b", "mamba2-370m",
+    "whisper-tiny", "zamba2-1.2b", "qwen1.5-0.5b", "starcoder2-15b",
+    "stablelm-1.6b", "yi-6b",
+]
+
+B, S = 2, 64
+
+
+def _batch(cfg, key=0):
+    pipe = SyntheticLM(vocab=cfg.vocab, seq_len=S, global_batch=B, seed=key)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+    if cfg.family == "vlm":
+        batch["vis_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(7), (B, cfg.n_vis_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(8), (B, 32, cfg.d_model))
+    return batch
+
+
+def test_all_assigned_archs_registered():
+    assert set(ARCHS) <= set(list_archs())
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_forward_and_train_step(name):
+    cfg = get_config(name).reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    logits, aux = api.forward(params, batch)
+    exp_len = S + (cfg.n_vis_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, exp_len, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), "non-finite logits"
+
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(api, opt))
+    opt_state = opt.init(params)
+    params2, opt_state2, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # parameters actually changed
+    diff = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), params, params2)
+    assert max(jax.tree_util.tree_leaves(diff)) > 0.0
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_decode_step(name):
+    cfg = get_config(name).reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    cache = api.init_cache(B, max_len=32)
+    tokens = jnp.ones((B, 1), jnp.int32)
+    logits, cache2 = jax.jit(api.decode)(params, cache, tokens,
+                                         jnp.asarray(5, jnp.int32))
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize(
+    "name", ["qwen1.5-0.5b", "yi-6b", "dbrx-132b", "mamba2-370m",
+             "zamba2-1.2b", "whisper-tiny", "internvl2-1b"])
+def test_prefill_decode_matches_forward(name):
+    """Teacher forcing: forward(tokens[0:n]) logits at position n-1 must
+    equal prefill(tokens[0:k]) + decode steps for the rest."""
+    cfg = dataclasses.replace(get_config(name).reduced(), remat=False)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(1))
+    n, k = 16, 12
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, n)), jnp.int32)
+    batch = {"tokens": toks}
+    vis = 0
+    if cfg.family == "vlm":
+        batch["vis_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(7), (B, cfg.n_vis_tokens, cfg.d_model))
+        vis = cfg.n_vis_tokens
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(8), (B, 32, cfg.d_model))
+
+    full_logits, _ = api.forward(params, batch)
+
+    pre = {k2: (v[:, :k] if k2 == "tokens" else v) for k2, v in batch.items()}
+    if cfg.family == "encdec":
+        cache = api.init_cache(B, max_len=n)
+        cache = {**cache, "xk": cache["xk"][:, :, :32], "xv": cache["xv"][:, :, :32]}
+        logits, cache = api.prefill(params, pre, n)
+    else:
+        logits, cache = api.prefill(params, pre, n + vis)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0]), np.asarray(full_logits[:, vis + k - 1]),
+        rtol=2e-2, atol=2e-2)
+
+    for i in range(k, n):
+        logits, cache = api.decode(params, cache, toks[:, i:i + 1],
+                                   jnp.asarray(vis + i, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, vis + i]),
+            rtol=2e-2, atol=2e-2,
+            err_msg=f"{name}: decode step {i} diverges from forward")
+
+
+def test_structured_pipeline_is_learnable():
+    """A couple hundred steps on the structured stream should clearly cut
+    the loss below the uniform baseline ln(V)."""
+    cfg = get_config("qwen1.5-0.5b").reduced(vocab=64, n_layers=2)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=3e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(api, opt))
+    pipe = SyntheticLM(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=0)
+    losses = []
+    for i, b in enumerate(pipe.batches(120)):
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.8 * np.log(cfg.vocab), (losses[0], losses[-1])

@@ -1,0 +1,160 @@
+"""Tests for the stream-analytics substrate: DAG parallelization, placement,
+and the fluid simulator's invariants + the paper's headline claims."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.net import LinkKind, big_switch, fat_tree
+from repro.streams import (
+    Edge,
+    Grouping,
+    Operator,
+    StreamApp,
+    compile_sim,
+    linkedin_tags,
+    motivation_chain,
+    parallelize,
+    round_robin,
+    simulate,
+    trending_topics,
+    trucking_iot,
+)
+from repro.streams.placement import STRATEGIES, traffic_aware
+
+
+class TestParallelize:
+    def test_counts_and_groupings(self):
+        g = parallelize(linkedin_tags(), seed=0)
+        ops = {o.name: o for o in g.app.operators}
+        assert g.n_instances == sum(o.parallelism for o in g.app.operators)
+        # GLOBAL grouping: count->topk flows all end at the same instance
+        topk_flows = [
+            f for f in range(g.n_flows)
+            if g.inst_names[g.dst_of_flow[f]].startswith("topk")
+        ]
+        assert len(set(g.dst_of_flow[f] for f in topk_flows)) == 1
+        assert len(topk_flows) == ops["count"].parallelism
+
+    def test_output_conservation(self):
+        # per-instance outgoing fractions sum to the sum of edge weights (≤1)
+        g = parallelize(trending_topics(), seed=0)
+        sums = g.w_out.sum(axis=1)
+        for i in range(g.n_instances):
+            op = g.app.operators[g.op_of_inst[i]]
+            expected = sum(
+                e.weight for e in g.app.edges if e.src == op.name
+            )
+            assert sums[i] == pytest.approx(expected, rel=1e-6)
+
+    def test_all_grouping_broadcasts(self):
+        app = StreamApp(
+            "b", [Operator("s", 1, gen_rate=1.0), Operator("d", 3, proc_rate=10.0)],
+            [Edge("s", "d", Grouping.ALL)],
+        )
+        g = parallelize(app)
+        assert g.n_flows == 3
+        assert g.w_out.sum() == pytest.approx(3.0)  # duplicated to every dst
+
+
+class TestPlacement:
+    @pytest.mark.parametrize("name", list(STRATEGIES))
+    def test_valid(self, name):
+        g = parallelize(trending_topics(), seed=0)
+        kw = {"seed": 1} if name == "random" else {}
+        m = STRATEGIES[name](g, 8, **kw) if name != "random" else STRATEGIES[name](g, 8, 1)
+        assert m.shape == (g.n_instances,)
+        assert m.min() >= 0 and m.max() < 8
+
+    def test_traffic_aware_colocates_heavy_edges(self):
+        g = parallelize(trucking_iot(), seed=0)
+        m = traffic_aware(g, 8)
+        vols = np.zeros(g.n_flows)
+        # heaviest flow endpoints should share a machine more often than not
+        from repro.streams.placement import _steady_state_flow_volume
+        vols = _steady_state_flow_volume(g)
+        heavy = int(np.argmax(vols))
+        s, d = g.src_of_flow[heavy], g.dst_of_flow[heavy]
+        assert m[s] == m[d]
+
+
+class TestSimulator:
+    def test_queue_and_throughput_invariants(self):
+        g = parallelize(trending_topics(), seed=0)
+        sim = compile_sim(g, big_switch(8, 1.25), round_robin(g, 8))
+        r = simulate(sim, "tcp", seconds=120.0, dt=0.5)
+        assert np.isfinite(r.sink_mb).all()
+        assert (r.sink_mb >= -1e-6).all()
+        # sink rate cannot exceed end-to-end production bound
+        assert r.throughput_tps <= 1e6
+        # no link ever exceeds its capacity
+        assert (r.link_load <= r.caps[None, :] * (1 + 1e-3)).all()
+
+    @pytest.mark.parametrize("mk", [trending_topics, trucking_iot])
+    def test_appaware_beats_tcp_throughput(self, mk):
+        g = parallelize(mk(), seed=0)
+        sim = compile_sim(g, big_switch(8, 1.25), round_robin(g, 8))
+        tcp = simulate(sim, "tcp", seconds=300.0, dt=0.5)
+        aa = simulate(sim, "appaware", seconds=300.0, dt=0.5)
+        assert aa.throughput_tps > tcp.throughput_tps * 1.10  # ≥ +10%
+
+    def test_appaware_beats_tcp_multihop(self):
+        # paper Fig. 9: bottleneck shifted to throttled internal links
+        g = parallelize(trending_topics(), seed=0)
+        topo = fat_tree(up=12.5).set_capacity(LinkKind.INTERNAL, 1.25)
+        sim = compile_sim(g, topo, round_robin(g, topo.n_machines))
+        tcp = simulate(sim, "tcp", seconds=300.0, dt=0.5)
+        aa = simulate(sim, "appaware", seconds=300.0, dt=0.5)
+        assert aa.throughput_tps > tcp.throughput_tps * 1.05
+        # internal links never exceed throttled capacity
+        internal = np.asarray(topo.link_kinds) == int(LinkKind.INTERNAL)
+        assert (r := aa.link_load[:, internal].max()) <= 1.25 * (1 + 1e-3), r
+
+    def test_bottleneck_free_parity(self):
+        # paper §VI-B: with sufficient capacity both policies perform alike
+        g = parallelize(trucking_iot(), seed=0)
+        sim = compile_sim(g, big_switch(8, 125.0), round_robin(g, 8))
+        tcp = simulate(sim, "tcp", seconds=200.0, dt=0.5)
+        aa = simulate(sim, "appaware", seconds=200.0, dt=0.5)
+        assert aa.throughput_tps == pytest.approx(tcp.throughput_tps, rel=0.05)
+
+    def test_fixed_policy_and_motivation_gain(self):
+        # brute-force style: the best fixed allocation beats TCP (Fig. 3)
+        g = parallelize(motivation_chain(), seed=0)
+        topo = big_switch(3, 1.25)
+        # TP2-like placement: src+opB on m0 -> their flows share m0's uplink
+        place = np.array([0, 1, 0, 2])
+        sim = compile_sim(g, topo, place)
+        tcp = simulate(sim, "tcp", seconds=200.0, dt=0.5)
+        best = 0.0
+        for w in np.linspace(0.1, 0.9, 9):
+            x = np.array([w * 1.25, 1.25, (1 - w) * 1.25], np.float32)
+            r = simulate(sim, "fixed", seconds=200.0, dt=0.5, x_fixed=x)
+            best = max(best, r.throughput_tps)
+        assert best >= tcp.throughput_tps
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_property_random_dags_stable(self, seed):
+        rng = np.random.default_rng(seed)
+        n_mid = int(rng.integers(1, 4))
+        ops = [Operator("src", int(rng.integers(1, 3)), gen_rate=float(rng.uniform(0.5, 3.0)), proc_rate=100.0)]
+        edges = []
+        prev = "src"
+        for k in range(n_mid):
+            name = f"op{k}"
+            ops.append(Operator(name, int(rng.integers(1, 4)), proc_rate=100.0,
+                                selectivity=float(rng.uniform(0.3, 1.5)),
+                                join=bool(rng.integers(0, 2))))
+            edges.append(Edge(prev, name,
+                              rng.choice([Grouping.SHUFFLE, Grouping.KEY, Grouping.GLOBAL]),
+                              key_skew=float(rng.uniform(0, 1))))
+            prev = name
+        ops.append(Operator("sink", 1, proc_rate=100.0, selectivity=0.0))
+        edges.append(Edge(prev, "sink", Grouping.GLOBAL))
+        g = parallelize(StreamApp("rand", ops, edges), seed=seed)
+        topo = big_switch(4, float(rng.uniform(0.5, 4.0)))
+        sim = compile_sim(g, topo, round_robin(g, 4))
+        for pol in ("tcp", "appaware"):
+            r = simulate(sim, pol, seconds=60.0, dt=0.5)
+            assert np.isfinite(r.sink_mb).all() and np.isfinite(r.latency).all()
+            assert (r.link_load <= r.caps[None, :] * (1 + 1e-3)).all()

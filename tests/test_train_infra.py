@@ -1,0 +1,214 @@
+"""Fault-tolerance & distributed-optimization substrate tests:
+checkpoint/restart, straggler handling, elastic resharding, gradient
+compression, serving engine."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import SyntheticLM
+from repro.models.registry import get_config, get_model
+from repro.serve.engine import Request, ServeEngine
+from repro.train.checkpoint import Checkpointer
+from repro.train.compression import (
+    compressed_bytes_ratio,
+    dequantize_int8,
+    ef_init,
+    int8_roundtrip,
+    quantize_int8,
+    topk_ef_transform,
+)
+from repro.train.driver import DriverConfig, TrainDriver
+from repro.train.optim import AdamW, warmup_cosine
+from repro.train.step import make_train_step
+
+
+def _tiny():
+    cfg = get_config("qwen1.5-0.5b").reduced(vocab=64, n_layers=2)
+    return get_model(cfg)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_integrity(self, tmp_path):
+        api = _tiny()
+        params = api.init(jax.random.PRNGKey(0))
+        ck = Checkpointer(tmp_path, keep=2)
+        ck.save(7, {"params": params})
+        restored, step = ck.restore({"params": params})
+        assert step == 7
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(restored["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_atomic_and_retention(self, tmp_path):
+        api = _tiny()
+        params = api.init(jax.random.PRNGKey(0))
+        ck = Checkpointer(tmp_path, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, {"params": params})
+        ckpts = sorted(p.name for p in pathlib.Path(tmp_path).glob("ckpt_*"))
+        assert ckpts == ["ckpt_00000003", "ckpt_00000004"]
+        assert not list(pathlib.Path(tmp_path).glob("*.tmp"))
+
+    def test_corruption_detected(self, tmp_path):
+        api = _tiny()
+        params = api.init(jax.random.PRNGKey(0))
+        ck = Checkpointer(tmp_path)
+        ck.save(1, {"params": params})
+        f = next(pathlib.Path(tmp_path).glob("ckpt_*/arrays.npz"))
+        data = bytearray(f.read_bytes())
+        data[len(data) // 2] ^= 0xFF
+        f.write_bytes(bytes(data))
+        with pytest.raises(Exception):
+            ck.restore({"params": params})
+
+    def test_async_save(self, tmp_path):
+        api = _tiny()
+        params = api.init(jax.random.PRNGKey(0))
+        ck = Checkpointer(tmp_path)
+        ck.save_async(5, {"params": params})
+        ck.wait()
+        assert ck.latest_step() == 5
+
+
+class TestDriver:
+    def test_failure_restart_resumes_stream(self, tmp_path):
+        api = _tiny()
+        pipe = SyntheticLM(vocab=api.cfg.vocab, seq_len=32, global_batch=4)
+        dcfg = DriverConfig(steps=25, ckpt_every=10,
+                            ckpt_dir=str(tmp_path))
+        drv = TrainDriver(api, AdamW(lr=1e-3), pipe, dcfg,
+                          failure_at={17})
+        params, _, step = drv.run()
+        assert step == 25
+        kinds = [e for _, e in drv.events]
+        assert any("failure" in k for k in kinds)
+        assert any("restart-from-ckpt" in k for k in kinds)
+        # deterministic: a clean run reaches the same loss trajectory
+        dcfg2 = DriverConfig(steps=25, ckpt_every=10,
+                             ckpt_dir=str(tmp_path) + "_clean")
+        drv2 = TrainDriver(api, AdamW(lr=1e-3), pipe, dcfg2)
+        params2, _, _ = drv2.run()
+        final = {m["step"]: m["loss"] for m in drv.metrics}
+        final2 = {m["step"]: m["loss"] for m in drv2.metrics}
+        assert final[24] == pytest.approx(final2[24], rel=1e-4)
+
+    def test_straggler_replay(self, tmp_path):
+        api = _tiny()
+        pipe = SyntheticLM(vocab=api.cfg.vocab, seq_len=32, global_batch=4)
+        dcfg = DriverConfig(steps=6, ckpt_every=100, ckpt_dir=str(tmp_path),
+                            deadline_s=0.2)
+        drv = TrainDriver(api, AdamW(lr=1e-3), pipe, dcfg,
+                          straggle_at={3: 0.5})
+        _, _, step = drv.run()
+        assert step == 6
+        assert any("straggler" in e for _, e in drv.events)
+
+    def test_elastic_reshard(self, tmp_path):
+        api = _tiny()
+        pipe = SyntheticLM(vocab=api.cfg.vocab, seq_len=32, global_batch=4)
+        dcfg = DriverConfig(steps=2, ckpt_every=100, ckpt_dir=str(tmp_path))
+        drv = TrainDriver(api, AdamW(lr=1e-3), pipe, dcfg)
+        params, opt_state, _ = drv.run()
+        # reshard onto the (single-device) mesh: exercises the device_put path
+        from repro.launch.mesh import make_local_mesh
+        from repro.launch.shardings import param_shardings
+        mesh = make_local_mesh()
+        p_sh = param_shardings(mesh, api)
+        from repro.train.optim import AdamState
+        o_sh = AdamState(step=None, m=p_sh, v=p_sh)
+        # build sharding tree with step replicated
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        o_sh = AdamState(step=NamedSharding(mesh, P()), m=p_sh, v=p_sh)
+        p2, o2 = drv.reshard_to(params, opt_state, p_sh, o_sh)
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_bounded(self):
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(1000),
+                        jnp.float32)
+        q, s = quantize_int8(x)
+        err = jnp.abs(dequantize_int8(q, s) - x).max()
+        assert float(err) <= float(s) * 0.5 + 1e-6
+        assert q.dtype == jnp.int8
+
+    def test_topk_ef_conserves_mass(self):
+        g = {"a": jnp.arange(-8.0, 8.0), "b": jnp.ones((4, 4))}
+        st = ef_init(g)
+        kept, st2 = topk_ef_transform(g, st, fraction=0.25)
+        # kept + error == original (+ previous error 0)
+        for k in g:
+            np.testing.assert_allclose(
+                np.asarray(kept[k] + st2.error[k]), np.asarray(g[k]),
+                rtol=1e-6)
+
+    def test_ef_training_still_converges(self):
+        api = _tiny()
+        pipe = SyntheticLM(vocab=api.cfg.vocab, seq_len=32, global_batch=8)
+        opt = AdamW(lr=3e-3)
+        params = api.init(jax.random.PRNGKey(0))
+        opt_state = opt.init(params)
+        ef = ef_init(params)
+
+        from repro.train.step import make_loss_fn
+        loss_fn = make_loss_fn(api)
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+
+        @jax.jit
+        def apply(params, opt_state, ef, batch):
+            (_, metrics), grads = grad_fn(params, batch)
+            kept, ef = topk_ef_transform(grads, ef, fraction=0.1)
+            kept = int8_roundtrip(kept)
+            updates, opt_state, _ = opt.update(kept, opt_state, params)
+            from repro.train.optim import apply_updates
+            return apply_updates(params, updates), opt_state, ef, metrics
+
+        losses = []
+        for i, b in enumerate(pipe.batches(150)):
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            params, opt_state, ef, m = apply(params, opt_state, ef, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < 0.9 * np.log(api.cfg.vocab)
+
+    def test_wire_ratio(self):
+        assert compressed_bytes_ratio(0.01) < 0.05  # >20x reduction
+
+
+class TestServeEngine:
+    def test_batched_greedy_decode(self):
+        api = _tiny()
+        params = api.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(api, max_len=64, batch_slots=2)
+        eng.load(params)
+        rng = np.random.default_rng(0)
+        reqs = [Request(prompt=rng.integers(0, api.cfg.vocab, 8,
+                                            dtype=np.int32),
+                        max_new_tokens=5) for _ in range(5)]
+        eng.run(reqs)
+        assert all(r.done for r in reqs)
+        assert all(len(r.out) == 5 for r in reqs)
+
+    def test_decode_matches_prefill_teacher_forcing(self):
+        api = _tiny()
+        params = api.init(jax.random.PRNGKey(1))
+        eng = ServeEngine(api, max_len=64, batch_slots=1)
+        eng.load(params)
+        prompt = np.arange(8, dtype=np.int32)
+        r = Request(prompt=prompt, max_new_tokens=4)
+        eng.run([r])
+        # re-running the same request is deterministic
+        r2 = Request(prompt=prompt, max_new_tokens=4)
+        eng.run([r2])
+        assert r.out == r2.out
+
+
+def test_schedule_warmup_cosine():
+    lr = warmup_cosine(1.0, warmup=10, total=110, floor=0.1)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(lr(jnp.asarray(110))) == pytest.approx(0.1)
