@@ -1,0 +1,94 @@
+"""Fleet engine benchmark: batched `simulate_many` vs a sequential
+`simulate` loop over the same scenarios.
+
+The sequential loop pays one XLA compile per distinct [F, L, I] shape plus
+per-scenario dispatch; the batched path compiles ONE vmapped scan and runs
+the whole fleet in a single fused program. Reports end-to-end wall-clock
+(first call, compile included — the realistic "run a study" cost) and
+steady-state (second call) speedups.
+
+On CPU the scenario axis is additionally sharded across forced XLA host
+devices (one per core, up to 8), so the fleet runs genuinely in parallel —
+set BEFORE jax initializes, hence the env fiddling above the imports.
+
+    PYTHONPATH=src python benchmarks/fleet.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+if "jax" not in sys.modules:  # too late to force devices otherwise
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={min(os.cpu_count() or 1, 8)}"
+    )
+
+import jax
+
+from benchmarks.common import emit
+from repro.streams import (
+    compile_fleet,
+    random_scenarios,
+    seed_fleet,
+    simulate,
+    simulate_many,
+)
+
+SECONDS = 60.0
+DT = 0.5
+N_EXTRA_RANDOM = 16  # on top of the 24-scenario seed corpus
+
+
+def _wall(fn):
+    t0 = time.time()
+    out = fn()
+    return time.time() - t0, out
+
+
+def run(policy: str = "appaware", seconds: float = SECONDS) -> list[dict]:
+    sims = compile_fleet(
+        seed_fleet(seed=0) + random_scenarios(N_EXTRA_RANDOM, seed=42))
+
+    def sequential():
+        return [simulate(s, policy, seconds=seconds, dt=DT) for s in sims]
+
+    def batched():
+        return simulate_many(sims, policy, seconds=seconds, dt=DT)
+
+    # cold: includes compilation — what one pays for a fresh parameter study
+    t_seq_cold, _ = _wall(sequential)
+    t_bat_cold, _ = _wall(batched)
+    # warm: compile caches hot, pure execution
+    t_seq_warm, seq = _wall(sequential)
+    t_bat_warm, bat = _wall(batched)
+
+    # sanity: batched results match the sequential loop
+    worst = max(
+        abs(a.throughput_tps - b.throughput_tps)
+        for a, b in zip(seq, bat)
+    )
+
+    return [{
+        "name": f"fleet_{policy}",
+        "us_per_call": t_bat_warm * 1e6,
+        "n_scenarios": len(sims),
+        "backend": jax.default_backend(),
+        "seq_cold_s": round(t_seq_cold, 2),
+        "batch_cold_s": round(t_bat_cold, 2),
+        "speedup_cold": round(t_seq_cold / t_bat_cold, 2),
+        "seq_warm_s": round(t_seq_warm, 2),
+        "batch_warm_s": round(t_bat_warm, 2),
+        "speedup_warm": round(t_seq_warm / t_bat_warm, 2),
+        "max_tps_diff": f"{worst:.2e}",
+    }]
+
+
+def main() -> None:
+    for policy in ("tcp", "appaware"):
+        emit(run(policy), "fleet")
+
+
+if __name__ == "__main__":
+    main()

@@ -128,6 +128,24 @@ def _per_link_rates(program: LinkProgram, state: FlowState, dt: float):
     )
 
 
+def _per_link_rates_pallas(program: LinkProgram, state: FlowState, dt: float):
+    """Same [L, F] solve through the batched Pallas waterfill kernel
+    (``repro.kernels.waterfill``) — bisection on θ instead of the sort.
+
+    INTERNAL links are fed as uplinks; ``allocate`` never reads their rows
+    (it handles internal links by proportional scale-down), so only the
+    UPLINK/DOWNLINK selection has to agree with the exact solvers.
+    """
+    from repro.kernels.waterfill.ops import waterfill  # local: avoids cycle
+
+    mask = (program.R.T > 0).astype(jnp.float32)          # [L, F]
+    w = jnp.broadcast_to(state.uplink_demand()[None, :], mask.shape)
+    backlog = jnp.broadcast_to(state.lr_t1[None, :], mask.shape)
+    rho = jnp.broadcast_to(state.drain_rate(dt)[None, :], mask.shape)
+    kind01 = (program.kind == int(LinkKind.DOWNLINK)).astype(jnp.int32)
+    return waterfill(w, backlog, rho, mask, program.capacity, kind01, dt=dt)
+
+
 def backfill(x: jnp.ndarray, program: LinkProgram, iters: int = 8,
              damping: float = 0.9) -> jnp.ndarray:
     """§VI-C backfill: hand leftover link capacity to flows proportionally to
@@ -147,15 +165,26 @@ def backfill(x: jnp.ndarray, program: LinkProgram, iters: int = 8,
     return jax.lax.fori_loop(0, iters, body, x)
 
 
-@functools.partial(jax.jit, static_argnames=("dt", "backfill_iters"))
+@functools.partial(jax.jit, static_argnames=("dt", "backfill_iters", "solver"))
 def allocate(
     program: LinkProgram,
     state: FlowState,
     dt: float = 1.0,
     backfill_iters: int = 8,
+    solver: str = "sort",
 ) -> jnp.ndarray:
-    """Algorithm 1, one interval: FlowState -> rate vector x [F] (MB/s)."""
-    per_link = _per_link_rates(program, state, dt)     # [L, F]
+    """Algorithm 1, one interval: FlowState -> rate vector x [F] (MB/s).
+
+    solver: "sort" — exact sort-based per-link solves (CPU-friendly);
+            "pallas" — the batched bisection waterfill kernel (TPU-friendly;
+            interpret mode off-TPU). Both satisfy the same KKT conditions.
+    """
+    if solver == "sort":
+        per_link = _per_link_rates(program, state, dt)         # [L, F]
+    elif solver == "pallas":
+        per_link = _per_link_rates_pallas(program, state, dt)  # [L, F]
+    else:
+        raise ValueError(f"unknown solver {solver!r}")
     kind = program.kind
 
     def min_over(mask_kind):
@@ -189,7 +218,8 @@ def allocate(
 class OnlineAllocator:
     """Alg. 1 driver: wraps a static LinkProgram; call once per Δt."""
 
-    def __init__(self, R, capacity, kind, dt: float = 1.0, backfill_iters: int = 8):
+    def __init__(self, R, capacity, kind, dt: float = 1.0,
+                 backfill_iters: int = 8, solver: str = "sort"):
         self.program = LinkProgram(
             R=jnp.asarray(R, jnp.float32),
             capacity=jnp.asarray(capacity, jnp.float32),
@@ -197,10 +227,11 @@ class OnlineAllocator:
         )
         self.dt = float(dt)
         self.backfill_iters = int(backfill_iters)
+        self.solver = solver
 
     def __call__(self, state: FlowState) -> jnp.ndarray:
         return allocate(self.program, state, dt=self.dt,
-                        backfill_iters=self.backfill_iters)
+                        backfill_iters=self.backfill_iters, solver=self.solver)
 
     @classmethod
     def from_topology(cls, topo, flows, **kw) -> "OnlineAllocator":

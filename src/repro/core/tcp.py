@@ -45,7 +45,9 @@ def maxmin_rates(R: jnp.ndarray, capacity: jnp.ndarray,
         hit = (R[:, l_star] > 0) & unfrozen & any_left
         x = jnp.where(hit, share, x)
         frozen = frozen | hit
-        link_done = link_done.at[l_star].set(link_done[l_star] | any_left)
+        # one-hot instead of .at[l_star].set: batched scatters compile
+        # poorly on CPU when this whole solve is vmapped (fleet engine)
+        link_done = link_done | ((jnp.arange(L) == l_star) & any_left)
         return x, frozen, link_done
 
     x0 = jnp.zeros((F,), R.dtype)

@@ -7,7 +7,23 @@ from repro.streams.app import (  # noqa: F401
     parallelize,
     source_sink_paths,
 )
+from repro.streams.fleet import (  # noqa: F401
+    FleetShape,
+    pad_sim,
+    simulate_many,
+    stack_sims,
+)
 from repro.streams.placement import STRATEGIES, round_robin, packed, traffic_aware  # noqa: F401
+from repro.streams.scenarios import (  # noqa: F401
+    Scenario,
+    capacity_sweep,
+    compile_fleet,
+    link_failure_sweep,
+    random_app,
+    random_scenarios,
+    seed_fleet,
+    time_varying_sweep,
+)
 from repro.streams.simulator import (  # noqa: F401
     CompiledSim,
     SimResult,

@@ -1,0 +1,235 @@
+"""Batched multi-scenario simulation: run a *fleet* of independent
+simulations as one jitted ``jax.vmap``-over-``lax.scan`` program.
+
+The paper validates Alg. 1 on one 10-workstation topology (§VI); every
+follow-up question — capacity sweeps, placement studies, link failures,
+random-DAG robustness — is "run the same simulator on N variants". Doing
+that as a python loop costs N separate XLA compilations (every scenario has
+its own [F, L, I] shape) plus N dispatch streams. Instead we:
+
+  1. ``pad_sim``  — zero-pad one :class:`CompiledSim` to a common
+     ``[F_max, L_max, I_max, P_max, A_max]`` shape. Padding is *neutral by
+     construction*: padded flows have no routing-matrix entries, no
+     producers, and zero queues, so they move no bytes; padded links carry
+     huge capacity and INTERNAL kind, so no solver ever binds on them;
+     padded instances generate/consume nothing; padded path rows are all
+     zero (the latency estimate is a pre-normalized sum, see
+     ``compile_sim``). A padded sim's trajectory equals the unpadded one's
+     on the real entries.
+  2. ``stack_sims`` — stack the padded pytrees into one batched
+     :class:`CompiledSim` (leading axis = scenario).
+  3. ``simulate_many`` — ``jax.vmap`` the existing scan-based ``_run`` over
+     the stacked batch: ONE compile, one fused program for the whole fleet,
+     then slice each scenario's outputs back to its true shapes.
+
+Exact parity with per-scenario ``simulate`` holds for the "tcp",
+"appaware", and "fixed" policies. For "appfair" the priority grouping is a
+function of the *number of apps*, so padding ``n_apps`` up to the fleet
+maximum can shift quantile-bucket boundaries when scenarios disagree on
+app count; batch "appfair" fleets with equal ``n_apps`` for exactness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.net.topology import LinkKind
+from repro.streams.simulator import (
+    CompiledSim,
+    SimResult,
+    _run,
+    resolve_upd_every,
+    smoke_seconds,
+)
+
+# padded links must never constrain any solver: effectively infinite pipes
+_PAD_CAP = 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetShape:
+    """Common padded shape of a stacked fleet."""
+
+    n_flows: int
+    n_links: int
+    n_insts: int
+    n_paths: int
+    n_apps: int
+
+    @classmethod
+    def cover(cls, sims: Sequence[CompiledSim]) -> "FleetShape":
+        """Smallest shape covering every sim in the fleet."""
+        return cls(
+            n_flows=max(s.R.shape[0] for s in sims),
+            n_links=max(s.R.shape[1] for s in sims),
+            n_insts=max(s.M_in.shape[0] for s in sims),
+            n_paths=max(s.paths.shape[0] for s in sims),
+            n_apps=max(s.n_apps for s in sims),
+        )
+
+
+# padding/stacking run in numpy: hundreds of tiny jnp.pad dispatches would
+# dominate the batched path's wall-clock before XLA ever runs
+def _pad1(a, n, value=0.0):
+    a = np.asarray(a)
+    pad = n - a.shape[0]
+    return a if pad <= 0 else np.pad(a, (0, pad), constant_values=value)
+
+
+def _pad2(a, n0, n1):
+    a = np.asarray(a)
+    p0, p1 = n0 - a.shape[0], n1 - a.shape[1]
+    if p0 <= 0 and p1 <= 0:
+        return a
+    return np.pad(a, ((0, max(p0, 0)), (0, max(p1, 0))))
+
+
+def pad_sim(sim: CompiledSim, shape: FleetShape,
+            tuples_per_mb: float | None = None) -> CompiledSim:
+    """Zero-pad ``sim`` to ``shape`` without changing its dynamics.
+
+    ``tuples_per_mb`` (a *static* pytree field) may be overridden so every
+    member of a fleet shares one treedef; callers keep the true value per
+    scenario (``simulate_many`` does) for throughput conversion.
+    """
+    F, L = shape.n_flows, shape.n_links
+    I, P, A = shape.n_insts, shape.n_paths, shape.n_apps
+    if sim.n_apps > A:
+        raise ValueError(f"cannot pad n_apps {sim.n_apps} down to {A}")
+    f = False
+    return CompiledSim(
+        R=_pad2(sim.R, F, L),
+        caps=_pad1(sim.caps, L, _PAD_CAP),
+        kinds=_pad1(sim.kinds, L, int(LinkKind.INTERNAL)),
+        has_links=_pad1(sim.has_links, F, f),
+        M_in=_pad2(sim.M_in, I, F),
+        w_out=_pad2(sim.w_out, I, F),
+        p_in=_pad1(sim.p_in, F),
+        proc_rate=_pad1(sim.proc_rate, I),
+        selectivity=_pad1(sim.selectivity, I),
+        gen_rate=_pad1(sim.gen_rate, I),
+        is_join=_pad1(sim.is_join, I, f),
+        is_sink=_pad1(sim.is_sink, I, f),
+        join_dst=_pad1(sim.join_dst, F, f),
+        droppable=_pad1(sim.droppable, F, f),
+        dst_of_flow=_pad1(sim.dst_of_flow, F, 0),
+        paths=_pad2(sim.paths, P, F),
+        tuples_per_mb=(sim.tuples_per_mb if tuples_per_mb is None
+                       else float(tuples_per_mb)),
+        app_of_flow=_pad1(sim.app_of_flow, F, 0),
+        app_of_inst=_pad1(sim.app_of_inst, I, 0),
+        n_apps=A,
+    )
+
+
+def stack_sims(
+    sims: Sequence[CompiledSim], shape: FleetShape | None = None
+) -> tuple[CompiledSim, FleetShape]:
+    """Pad every sim to a common shape and stack into one batched pytree
+    (every array leaf gains a leading scenario axis)."""
+    if not sims:
+        raise ValueError("empty fleet")
+    shape = FleetShape.cover(sims) if shape is None else shape
+    padded = [pad_sim(s, shape, tuples_per_mb=1.0) for s in sims]
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.asarray(np.stack(xs)), *padded)
+    return stacked, shape
+
+
+def _run_fleet(stacked: CompiledSim, policy: str, n_ticks: int, dt: float,
+               upd_every: int, x_fixed, alpha: float, n_groups: int,
+               qcap: float, solver: str):
+    def one(sim, xf):
+        return _run(sim, policy, n_ticks, dt, upd_every, x_fixed=xf,
+                    alpha=alpha, n_groups=n_groups, qcap=qcap, solver=solver)
+
+    if x_fixed is None:
+        return jax.vmap(lambda s: one(s, None))(stacked)
+    return jax.vmap(one)(stacked, x_fixed)
+
+
+def _shard_batch(tree, n_scen: int):
+    """Place the stacked batch axis across all local devices (no-op on one
+    device). The batch is padded to a device multiple by the caller."""
+    devs = jax.devices()
+    if len(devs) <= 1 or n_scen % len(devs) != 0:
+        return tree
+    mesh = Mesh(np.asarray(devs), ("scenarios",))
+    sharding = NamedSharding(mesh, PartitionSpec("scenarios"))
+    return jax.tree_util.tree_map(
+        lambda a: jax.device_put(a, sharding), tree)
+
+
+def simulate_many(
+    sims: Sequence[CompiledSim],
+    policy: str = "tcp",
+    seconds: float = 600.0,
+    dt: float = 0.5,
+    upd_every: int | None = None,
+    x_fixed: Sequence[np.ndarray] | None = None,
+    alpha: float = 0.5,
+    n_groups: int = 8,
+    qcap: float = 8.0,
+    solver: str = "sort",
+    shard: bool = True,
+) -> list[SimResult]:
+    """Run the whole fleet as one vmapped program; one :class:`SimResult`
+    per scenario, each sliced back to that scenario's true [L]/[A] shapes —
+    element-wise equal to ``simulate(sims[b], ...)`` (see module docstring
+    for the "appfair" caveat).
+
+    With >1 local device (e.g. ``--xla_force_host_platform_device_count``
+    on CPU, or a TPU slice) and ``shard=True``, the scenario axis is
+    sharded across devices: the batch is padded with replicas of the last
+    scenario up to a device multiple and the extras are dropped on return.
+    """
+    if not sims:
+        raise ValueError("empty fleet")
+    if policy == "appfair" and len({s.n_apps for s in sims}) > 1:
+        # padding n_apps up to the fleet max shifts the priority-grouping
+        # quantile buckets (see module docstring): parity would silently break
+        raise ValueError(
+            "appfair fleets must share one n_apps; batch per app count")
+    n_dev = len(jax.devices()) if shard else 1
+    pad_b = (-len(sims)) % n_dev if n_dev > 1 else 0
+    run_sims = list(sims) + [sims[-1]] * pad_b
+    stacked, shape = stack_sims(run_sims)
+    n_ticks = int(round(smoke_seconds(seconds) / dt))
+    upd_every = resolve_upd_every(policy, dt, upd_every)
+    xf = None
+    if x_fixed is not None:
+        if len(x_fixed) != len(sims):
+            raise ValueError("x_fixed must give one rate vector per scenario")
+        xf = jnp.stack([
+            _pad1(jnp.asarray(x, jnp.float32), shape.n_flows)
+            for x in list(x_fixed) + [x_fixed[-1]] * pad_b
+        ])
+    if shard:
+        stacked = _shard_batch(stacked, len(run_sims))
+        if xf is not None:
+            xf = _shard_batch(xf, len(run_sims))
+    sink, sink_app, lat, load = _run_fleet(
+        stacked, policy, n_ticks, dt, upd_every, xf, alpha, n_groups, qcap,
+        solver,
+    )
+    sink, sink_app = np.asarray(sink), np.asarray(sink_app)
+    lat, load = np.asarray(lat), np.asarray(load)
+    out = []
+    for b, sim in enumerate(sims):
+        L, A = sim.caps.shape[0], sim.n_apps
+        out.append(SimResult(
+            sink_mb=sink[b],
+            sink_mb_app=sink_app[b][:, :A],
+            latency=lat[b],
+            link_load=load[b][:, :L],
+            caps=np.asarray(sim.caps),
+            kinds=np.asarray(sim.kinds),
+            tuples_per_mb=sim.tuples_per_mb,
+            dt=dt,
+        ))
+    return out

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any
 
 import jax
@@ -74,7 +75,8 @@ class CompiledSim:
     join_dst: Any        # [F] bool: flow terminates at a join instance
     droppable: Any       # [F] bool: stale excess is discarded at the join
     dst_of_flow: Any     # [F]
-    paths: Any           # [P, F]
+    paths: Any           # [P, F], rows pre-scaled by 1/P (Σ of path waits
+                         #         = mean latency; zero rows are neutral)
     tuples_per_mb: float
     app_of_flow: Any     # [F] int
     app_of_inst: Any     # [I] int
@@ -125,6 +127,10 @@ def compile_sim(
         if s > 0:
             p_in[sel] /= s
     droppable = np.array([edges[e].droppable for e in graph.edge_of_flow])
+    # pre-scale path masks by 1/P: the latency estimate becomes a plain sum,
+    # which stays correct when `fleet.pad_sim` appends all-zero path rows
+    paths = source_sink_paths(graph)
+    paths = paths / max(paths.shape[0], 1)
     app_of_inst = (
         np.zeros(graph.n_instances, np.int32) if app_of_inst is None else app_of_inst
     )
@@ -145,7 +151,7 @@ def compile_sim(
         join_dst=jnp.asarray(graph.is_join[graph.dst_of_flow]),
         droppable=jnp.asarray(droppable),
         dst_of_flow=jnp.asarray(graph.dst_of_flow),
-        paths=f32(source_sink_paths(graph)),
+        paths=f32(paths),
         tuples_per_mb=float(graph.app.tuples_per_mb),
         app_of_flow=jnp.asarray(app_of_inst[graph.dst_of_flow], jnp.int32),
         app_of_inst=jnp.asarray(app_of_inst, jnp.int32),
@@ -215,7 +221,7 @@ def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap):
         Qs / jnp.maximum(x, _EPS) + Qr / jnp.maximum(drain, _EPS), _LAT_CAP
     )
     path_lat = sim.paths @ wait                                  # [P]
-    latency = jnp.mean(path_lat)
+    latency = jnp.sum(path_lat)  # rows carry 1/P => this is the path mean
 
     link_load = transfer @ sim.R / dt                            # [L] MB/s
     return Qs, Qr, transfer, drain, (sink_mb, sink_mb_app, latency, link_load)
@@ -235,8 +241,10 @@ def _tcp_rates(sim: CompiledSim, Qs, Qr, prod_rate, drain_ewma, dt, qcap):
     return jnp.where(sim.has_links, jnp.minimum(x, demand), INTERNAL_RATE)
 
 
-def _appaware_rates(sim: CompiledSim, state: FlowState, dt_alloc, backfill_iters=8):
-    x = allocate(sim.program, state, dt=dt_alloc, backfill_iters=backfill_iters)
+def _appaware_rates(sim: CompiledSim, state: FlowState, dt_alloc,
+                    backfill_iters=8, solver: str = "sort"):
+    x = allocate(sim.program, state, dt=dt_alloc,
+                 backfill_iters=backfill_iters, solver=solver)
     return jnp.where(sim.has_links, x, INTERNAL_RATE)
 
 
@@ -284,11 +292,11 @@ class SimResult:
 @functools.partial(
     jax.jit,
     static_argnames=("policy", "n_ticks", "dt", "upd_every",
-                     "alpha", "n_groups"),
+                     "alpha", "n_groups", "solver"),
 )
 def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
          upd_every: int, x_fixed=None, alpha: float = 0.5, n_groups: int = 8,
-         qcap: float = 8.0):
+         qcap: float = 8.0, solver: str = "sort"):
     F = sim.R.shape[0]
     z = jnp.zeros((F,), jnp.float32)
 
@@ -302,7 +310,7 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
             # B (bytes transferred but not yet joined — stale drops still
             # count as backlog: the paper's memory-overrun signal, Fig. 5)
             st = FlowState(ls_t=ls, lr_t=lr, v=v_acc, ls_t1=Qs, lr_t1=B)
-            return _appaware_rates(sim, st, dt * upd_every)
+            return _appaware_rates(sim, st, dt * upd_every, solver=solver)
         if policy == "appfair":
             prio = group_by_throughput(mu, n_groups)
             x = strict_priority_alloc(
@@ -345,6 +353,20 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
     return ys
 
 
+def smoke_seconds(seconds: float, cap: float = 120.0) -> float:
+    """CI short-run mode: ``REPRO_SMOKE=1`` caps run length so the tier-1
+    suite finishes in minutes on a CPU runner (same dt, same warmup logic)."""
+    if os.environ.get("REPRO_SMOKE", "").strip() not in ("", "0"):
+        return min(seconds, cap)
+    return seconds
+
+
+def resolve_upd_every(policy: str, dt: float, upd_every: int | None) -> int:
+    if upd_every is None:
+        return int(round(5.0 / dt)) if policy in ("appaware", "appfair") else 1
+    return upd_every
+
+
 def simulate(
     sim: CompiledSim,
     policy: str = "tcp",
@@ -355,15 +377,15 @@ def simulate(
     alpha: float = 0.5,
     n_groups: int = 8,
     qcap: float = 8.0,
+    solver: str = "sort",
 ) -> SimResult:
     """Run one experiment (paper §VI: 600 s runs, Δt = 5 s allocator)."""
-    n_ticks = int(round(seconds / dt))
-    if upd_every is None:
-        upd_every = int(round(5.0 / dt)) if policy in ("appaware", "appfair") else 1
+    n_ticks = int(round(smoke_seconds(seconds) / dt))
+    upd_every = resolve_upd_every(policy, dt, upd_every)
     sink, sink_app, lat, load = _run(
         sim, policy, n_ticks, dt, upd_every,
         x_fixed=None if x_fixed is None else jnp.asarray(x_fixed, jnp.float32),
-        alpha=alpha, n_groups=n_groups, qcap=qcap,
+        alpha=alpha, n_groups=n_groups, qcap=qcap, solver=solver,
     )
     return SimResult(
         sink_mb=np.asarray(sink),

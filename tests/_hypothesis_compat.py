@@ -1,0 +1,104 @@
+"""Property-testing shim: real `hypothesis` when installed, else a minimal
+deterministic fallback so the tier-1 suite collects and runs everywhere.
+
+The fallback implements exactly the subset this repo's tests use —
+``@settings(max_examples=…, deadline=…)`` stacked on ``@given(**kwargs)``
+with ``st.integers`` / ``st.floats`` / ``st.lists`` strategies — by drawing
+``max_examples`` pseudo-random examples from a seed derived from the test's
+qualified name (stable across runs and processes; no shrinking, no
+database). Import from here instead of `hypothesis`:
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: np.random.Generator):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int = 0, max_value: int = 2**31 - 1):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw):
+            # bias an occasional endpoint in: hypothesis probes boundaries
+            def draw(rng):
+                r = rng.random()
+                if r < 0.05:
+                    return float(min_value)
+                if r < 0.10:
+                    return float(max_value)
+                return float(rng.uniform(min_value, max_value))
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements: "_Strategy", min_size: int = 0,
+                  max_size: int = 10):
+            return _Strategy(lambda rng: [
+                elements.draw(rng)
+                for _ in range(int(rng.integers(min_size, max_size + 1)))
+            ])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(
+                lambda rng: items[int(rng.integers(0, len(items)))])
+
+    st = _Strategies()
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
+        """Applied *outside* ``given``: annotate its wrapper."""
+        def deco(fn):
+            fn._max_examples = int(max_examples)
+            return fn
+        return deco
+
+    def given(**strategy_kw):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            kept = [p for name, p in sig.parameters.items()
+                    if name not in strategy_kw]
+            seed = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+
+            def wrapper(*args):
+                rng = np.random.default_rng(seed)
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategy_kw.items()}
+                    fn(*args, **drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            # hide strategy params from pytest's fixture resolution
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            return wrapper
+        return deco

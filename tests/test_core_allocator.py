@@ -3,7 +3,7 @@ TCP max-min baseline, §VII multi-app fairness."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     FlowState,
@@ -132,6 +132,32 @@ class TestAlgorithm1:
         load = x @ topo.routing_matrix(flows)
         kinds = topo.link_kinds
         assert np.all(load[kinds == int(LinkKind.INTERNAL)] <= 10.0 + 1e-3)
+
+    @pytest.mark.parametrize("topo_fn", [lambda: big_switch(4, 100.0), fat_tree])
+    def test_pallas_solver_parity(self, topo_fn):
+        # allocate(solver="pallas") — the bisection waterfill kernel in
+        # interpret mode — must match the exact sort-based solve end-to-end
+        # (through kind-min, internal scale-down, and backfill)
+        topo = topo_fn()
+        rng = np.random.default_rng(3)
+        m = topo.n_machines
+        flows = [(int(a), int(b)) for a, b in rng.integers(0, m, (14, 2))]
+        a_sort = OnlineAllocator.from_topology(topo, flows, solver="sort")
+        a_pal = OnlineAllocator.from_topology(topo, flows, solver="pallas")
+        for _ in range(3):
+            st_ = _mk_state(rng, len(flows))
+            xs = np.asarray(a_sort(st_))
+            xp = np.asarray(a_pal(st_))
+            np.testing.assert_allclose(xs, xp, rtol=2e-3, atol=2e-3)
+            # and the pallas path alone stays feasible
+            load = xp @ topo.routing_matrix(flows)
+            assert np.all(load <= topo.capacities * (1 + 1e-3))
+
+    def test_unknown_solver_rejected(self):
+        topo = big_switch(2, 10.0)
+        alloc = OnlineAllocator.from_topology(topo, [(0, 1)], solver="nope")
+        with pytest.raises(ValueError, match="solver"):
+            alloc(_mk_state(np.random.default_rng(0), 1))
 
     def test_backfill_utilization(self):
         # single bottleneck uplink shared by 3 flows: backfill should leave

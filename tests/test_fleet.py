@@ -1,0 +1,112 @@
+"""Batched multi-scenario engine: padding neutrality, batch-vs-sequential
+parity over the ≥16-scenario seed fleet, and the deterministic end-to-end
+regression on the paper's seed workloads (TT / junction-heavy TI)."""
+import numpy as np
+import pytest
+
+from repro.net import big_switch
+from repro.streams import (
+    FleetShape,
+    compile_fleet,
+    compile_sim,
+    pad_sim,
+    parallelize,
+    round_robin,
+    seed_fleet,
+    simulate,
+    simulate_many,
+    stack_sims,
+    trending_topics,
+    trucking_iot,
+)
+
+SECONDS = 40.0
+DT = 0.5
+
+
+@pytest.fixture(scope="module")
+def fleet_sims():
+    sims = compile_fleet(seed_fleet(seed=0))
+    assert len(sims) >= 16
+    return sims
+
+
+class TestPadding:
+    def test_pad_is_neutral(self, fleet_sims):
+        # a padded sim's trajectory equals the unpadded one on real entries
+        shape = FleetShape.cover(fleet_sims)
+        for sim in (fleet_sims[0], fleet_sims[3]):       # a TT and a TI
+            raw = simulate(sim, "tcp", seconds=SECONDS, dt=DT)
+            pad = simulate(pad_sim(sim, shape), "tcp", seconds=SECONDS, dt=DT)
+            np.testing.assert_allclose(pad.sink_mb, raw.sink_mb, atol=1e-5)
+            np.testing.assert_allclose(pad.latency, raw.latency,
+                                       rtol=1e-5, atol=1e-4)
+            L = raw.link_load.shape[1]
+            np.testing.assert_allclose(pad.link_load[:, :L], raw.link_load,
+                                       atol=1e-5)
+            # padded links carry nothing
+            assert np.abs(pad.link_load[:, L:]).max() == 0.0
+
+    def test_stack_shapes(self, fleet_sims):
+        stacked, shape = stack_sims(fleet_sims)
+        B = len(fleet_sims)
+        assert stacked.R.shape == (B, shape.n_flows, shape.n_links)
+        assert stacked.M_in.shape == (B, shape.n_insts, shape.n_flows)
+        assert stacked.paths.shape == (B, shape.n_paths, shape.n_flows)
+        assert stacked.n_apps == shape.n_apps
+
+    def test_pad_rejects_shrinking_apps(self, fleet_sims):
+        shape = FleetShape.cover(fleet_sims)
+        small = FleetShape(shape.n_flows, shape.n_links, shape.n_insts,
+                           shape.n_paths, 0)
+        with pytest.raises(ValueError, match="n_apps"):
+            pad_sim(fleet_sims[0], small)
+
+
+class TestBatchParity:
+    @pytest.mark.parametrize("policy", ["tcp", "appaware"])
+    def test_matches_sequential(self, fleet_sims, policy):
+        batch = simulate_many(fleet_sims, policy, seconds=SECONDS, dt=DT)
+        for b, sim in enumerate(fleet_sims):
+            ref = simulate(sim, policy, seconds=SECONDS, dt=DT)
+            rb = batch[b]
+            np.testing.assert_allclose(rb.sink_mb, ref.sink_mb, atol=1e-4)
+            np.testing.assert_allclose(rb.latency, ref.latency,
+                                       rtol=1e-4, atol=1e-3)
+            np.testing.assert_allclose(rb.link_load, ref.link_load, atol=1e-4)
+            # headline metrics within the acceptance tolerance
+            assert rb.throughput_tps == pytest.approx(
+                ref.throughput_tps, rel=1e-5, abs=1e-4)
+            assert rb.avg_latency_s == pytest.approx(
+                ref.avg_latency_s, rel=1e-5, abs=1e-4)
+
+    def test_fixed_policy_batched(self):
+        # per-scenario fixed rate vectors ride the batch's x_fixed axis
+        g = parallelize(trending_topics(), seed=0)
+        sims, xs = [], []
+        for cap in (1.25, 1.875):
+            sim = compile_sim(g, big_switch(8, cap), round_robin(g, 8))
+            sims.append(sim)
+            xs.append(np.full(g.n_flows, cap / 2, np.float32))
+        batch = simulate_many(sims, "fixed", seconds=SECONDS, dt=DT,
+                              x_fixed=xs)
+        for sim, x, rb in zip(sims, xs, batch):
+            ref = simulate(sim, "fixed", seconds=SECONDS, dt=DT, x_fixed=x)
+            np.testing.assert_allclose(rb.sink_mb, ref.sink_mb, atol=1e-4)
+
+    def test_x_fixed_length_mismatch_rejected(self, fleet_sims):
+        with pytest.raises(ValueError, match="x_fixed"):
+            simulate_many(fleet_sims[:2], "fixed", seconds=5.0,
+                          x_fixed=[np.ones(4, np.float32)])
+
+
+class TestEndToEndRegression:
+    """Deterministic seed-workload regression (fixed seeds, fixed grid)."""
+
+    @pytest.mark.parametrize("mk", [trending_topics, trucking_iot])
+    def test_appaware_beats_tcp_batched(self, mk):
+        g = parallelize(mk(), seed=0)
+        sim = compile_sim(g, big_switch(8, 1.25), round_robin(g, 8))
+        tcp, aa = (simulate_many([sim], pol, seconds=300.0, dt=DT)[0]
+                   for pol in ("tcp", "appaware"))
+        assert aa.throughput_tps > tcp.throughput_tps * 1.10

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention.ops import (
     flash_attention,
@@ -50,6 +50,58 @@ class TestWaterfill:
         assert np.all(out * (1 - mask) == 0)
         has = mask.sum(1) > 0
         np.testing.assert_allclose(out.sum(1)[has], cap[has], rtol=1e-3)
+
+    def test_all_zero_demand(self):
+        # zero backlog everywhere (downlink) / zero weight (uplink): the
+        # bisection and the exact sort must agree on the degenerate fills
+        L, F = 6, 32
+        z = np.zeros((L, F), np.float32)
+        rho = np.full((L, F), 2.0, np.float32)
+        mask = np.ones((L, F), np.float32)
+        cap = np.full(L, 12.0, np.float32)
+        kind = np.arange(L, dtype=np.int32) % 2
+        out = np.asarray(waterfill(z, z, rho, mask, cap, kind, dt=1.0))
+        ref = np.asarray(waterfill_reference(
+            *(jnp.asarray(a) for a in (z, z, rho, mask, cap, kind)), 1.0))
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+        # work conservation even with no demand signal
+        np.testing.assert_allclose(out.sum(1), cap, rtol=1e-3)
+
+    def test_single_flow_takes_link(self):
+        # one masked flow per link: it gets the whole capacity on both kinds
+        L, F = 4, 16
+        rng = np.random.default_rng(7)
+        w = rng.uniform(0.1, 5, (L, F)).astype(np.float32)
+        bl = rng.uniform(0, 10, (L, F)).astype(np.float32)
+        rho = rng.uniform(0.5, 4, (L, F)).astype(np.float32)
+        mask = np.zeros((L, F), np.float32)
+        keep = rng.integers(0, F, L)
+        mask[np.arange(L), keep] = 1.0
+        cap = rng.uniform(1, 20, L).astype(np.float32)
+        kind = np.array([0, 1, 0, 1], np.int32)
+        out = np.asarray(waterfill(w, bl, rho, mask, cap, kind, dt=0.5))
+        ref = np.asarray(waterfill_reference(
+            *(jnp.asarray(a) for a in (w, bl, rho, mask, cap, kind)), 0.5))
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(out[np.arange(L), keep], cap, rtol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_property_parity_random(self, seed):
+        # randomized (backlog, rho, mask, capacity): bisection == exact sort
+        rng = np.random.default_rng(seed)
+        L, F = int(rng.integers(1, 10)), int(rng.integers(1, 80))
+        w = rng.uniform(0, 20, (L, F)).astype(np.float32)
+        bl = rng.uniform(0, 30, (L, F)).astype(np.float32)
+        rho = rng.uniform(0.05, 10, (L, F)).astype(np.float32)
+        mask = (rng.random((L, F)) < 0.6).astype(np.float32)
+        cap = rng.uniform(0.5, 50, L).astype(np.float32)
+        kind = rng.integers(0, 2, L).astype(np.int32)
+        dt = float(rng.choice([0.5, 1.0, 5.0]))
+        out = np.asarray(waterfill(w, bl, rho, mask, cap, kind, dt=dt))
+        ref = np.asarray(waterfill_reference(
+            *(jnp.asarray(a) for a in (w, bl, rho, mask, cap, kind)), dt))
+        np.testing.assert_allclose(out, ref, rtol=5e-4, atol=5e-4)
 
 
 # -------------------------------------------------------- flash attention

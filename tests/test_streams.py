@@ -2,7 +2,7 @@
 and the fluid simulator's invariants + the paper's headline claims."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.net import LinkKind, big_switch, fat_tree
 from repro.streams import (
@@ -75,6 +75,119 @@ class TestPlacement:
         heavy = int(np.argmax(vols))
         s, d = g.src_of_flow[heavy], g.dst_of_flow[heavy]
         assert m[s] == m[d]
+
+
+class TestTickInvariants:
+    """Conservation/feasibility invariants of one `_tick` (the fluid step
+    every policy shares)."""
+
+    DT, QCAP = 0.5, 8.0
+
+    def _tick_once(self, mk, seed=0, cap=1.25, x=None):
+        import jax.numpy as jnp
+        from repro.streams.simulator import _tick
+
+        g = parallelize(mk(), seed=seed)
+        sim = compile_sim(g, big_switch(8, cap), round_robin(g, 8))
+        rng = np.random.default_rng(seed + 17)
+        F = g.n_flows
+        Qs = jnp.asarray(rng.uniform(0, self.QCAP, F), jnp.float32)
+        Qr = jnp.asarray(rng.uniform(0, self.QCAP, F), jnp.float32)
+        if x is None:
+            x = jnp.asarray(rng.uniform(0, 5, F), jnp.float32)
+        out = _tick(sim, Qs, Qr, x, self.DT, self.QCAP)
+        return g, sim, np.asarray(Qs), np.asarray(Qr), np.asarray(x), out
+
+    @pytest.mark.parametrize("mk", [trending_topics, trucking_iot])
+    def test_transfer_window_and_accounting(self, mk):
+        g, sim, Qs, Qr, x, out = self._tick_once(mk)
+        Qs1, Qr1, transfer, drain = (np.asarray(a) for a in out[:4])
+        tol = 1e-5
+        # transfers: nonnegative, ≤ rate·dt, ≤ sender queue, ≤ receiver window
+        assert transfer.min() >= -tol
+        assert np.all(transfer <= x * self.DT + tol)
+        assert np.all(transfer <= Qs + tol)
+        assert np.all(Qr + transfer <= self.QCAP + tol)
+        consume = np.asarray(drain) * self.DT
+        assert consume.min() >= -tol
+        assert np.all(consume <= Qr + transfer + tol)
+        # receiver accounting: exact on non-droppable flows; droppable flows
+        # may only *discard* (never mint) bytes
+        drop = np.asarray(sim.droppable)
+        raw_qr = Qr + transfer - consume
+        np.testing.assert_allclose(Qr1[~drop], raw_qr[~drop], atol=1e-5)
+        assert np.all(Qr1[drop] <= raw_qr[drop] + tol)
+        # sender accounting: emitted bytes are bounded by selectivity·input
+        # + generation (stall can only reduce them); droppable send queues
+        # additionally *discard* stale bytes (negative apparent emission)
+        emitted = Qs1 - Qs + transfer
+        assert emitted[~drop].min() >= -tol
+        M_in, w_out = np.asarray(sim.M_in), np.asarray(sim.w_out)
+        sel = np.asarray(sim.selectivity)
+        gen = np.asarray(sim.gen_rate)
+        out_bound = sel * (M_in @ consume) + gen * self.DT
+        by_inst = np.zeros(g.n_instances)
+        np.add.at(by_inst, np.asarray(g.src_of_flow), emitted)
+        assert np.all(by_inst <= w_out.sum(1) * out_bound + 1e-4)
+
+    def test_appaware_rates_keep_links_feasible(self):
+        # the appaware policy's x is link-feasible, so a tick's transfers are
+        import jax.numpy as jnp
+        from repro.core import FlowState
+        from repro.core.allocator import allocate
+        from repro.streams.simulator import INTERNAL_RATE
+
+        g = parallelize(trending_topics(), seed=0)
+        topo = big_switch(8, 1.25)
+        sim = compile_sim(g, topo, round_robin(g, 8))
+        rng = np.random.default_rng(5)
+        F = g.n_flows
+        st_ = FlowState(*[
+            jnp.asarray(rng.uniform(0, 6, F), jnp.float32) for _ in range(5)
+        ])
+        x = allocate(sim.program, st_, dt=self.DT)
+        x = jnp.where(sim.has_links, x, INTERNAL_RATE)
+        _, _, _, _, (sink, _, _, load) = self._extracted_tick(sim, rng, x)
+        assert np.all(np.asarray(load) <= topo.capacities * (1 + 1e-3))
+        assert float(sink) >= -1e-6
+
+    def _extracted_tick(self, sim, rng, x):
+        import jax.numpy as jnp
+        from repro.streams.simulator import _tick
+
+        F = sim.R.shape[0]
+        Qs = jnp.asarray(rng.uniform(0, self.QCAP, F), jnp.float32)
+        Qr = jnp.asarray(rng.uniform(0, self.QCAP, F), jnp.float32)
+        return _tick(sim, Qs, Qr, x, self.DT, self.QCAP)
+
+    def test_closed_loop_byte_conservation(self):
+        # selectivity-1 pipeline, ample capacity: every generated byte is
+        # either delivered to the sink or still queued — nothing minted/lost
+        import jax.numpy as jnp
+        from repro.streams.simulator import INTERNAL_RATE, _tick
+
+        app = StreamApp(
+            "cons",
+            [Operator("src", 1, gen_rate=0.8, proc_rate=100.0),
+             Operator("mid", 2, proc_rate=100.0, selectivity=1.0),
+             Operator("sink", 1, proc_rate=100.0, selectivity=0.0)],
+            [Edge("src", "mid", Grouping.SHUFFLE),
+             Edge("mid", "sink", Grouping.GLOBAL)],
+        )
+        g = parallelize(app, seed=0)
+        sim = compile_sim(g, big_switch(4, 5.0), round_robin(g, 4))
+        F = g.n_flows
+        x = jnp.where(sim.has_links, 5.0, INTERNAL_RATE)
+        Qs = Qr = jnp.zeros((F,), jnp.float32)
+        delivered = 0.0
+        T = 200
+        for _ in range(T):
+            Qs, Qr, _, _, (sink, _, _, _) = _tick(
+                sim, Qs, Qr, x, self.DT, self.QCAP)
+            delivered += float(sink)
+        generated = 0.8 * self.DT * T
+        total = delivered + float(jnp.sum(Qs) + jnp.sum(Qr))
+        np.testing.assert_allclose(total, generated, rtol=1e-3)
 
 
 class TestSimulator:
