@@ -1,0 +1,117 @@
+"""Allocator hot-path micro-benchmark: per-interval ``allocate`` cost at
+datacenter scale (ROADMAP: 10⁴ links × 10³ flows).
+
+Alg. 1 re-solves every Δt, so the per-interval solve is the controller's
+steady-state cost. Three paths over the same random LinkProgram/FlowState:
+
+  * ``sort``   — the fused batched solve (`allocator._per_link_rates`):
+                 ONE global argsort over flows + masked batched cumsums;
+  * ``vmap``   — the pre-fusion reference (`_per_link_rates_vmap`):
+                 one argsort *per link* under `jax.vmap` (kept as the
+                 parity oracle; benchmarked here to track the fusion win);
+  * ``pallas`` — the bisection waterfill kernel (TPU target; interpret
+                 mode off-TPU, so CPU numbers measure the kernel's control
+                 flow, not TPU performance).
+
+Sizes: {10², 10³, 10⁴} links × 10³ flows. ``REPRO_SMOKE=1`` (CI) caps the
+sweep at 10³ links and skips the interpret-mode pallas point beyond 10²
+(unrolling a 10³-link grid through the interpreter is compile-bound).
+
+    PYTHONPATH=src python benchmarks/allocator.py
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit_us
+from repro.core.allocator import (
+    LinkProgram,
+    _per_link_rates,
+    _per_link_rates_vmap,
+    allocate,
+)
+from repro.core.flowstate import FlowState
+
+N_FLOWS = 1_000
+LINK_SIZES = (100, 1_000, 10_000)
+SMOKE = os.environ.get("REPRO_SMOKE", "").strip() not in ("", "0")
+DT = 5.0
+
+
+def _mk_problem(L: int, F: int = N_FLOWS, seed: int = 0,
+                links_per_flow: int = 4) -> tuple[LinkProgram, FlowState]:
+    """Sparse random program: each flow crosses ~``links_per_flow`` links;
+    kinds split uplink/downlink/internal like a fat-tree."""
+    rng = np.random.default_rng(seed)
+    R = np.zeros((F, L), np.float32)
+    for f in range(F):
+        R[f, rng.choice(L, size=min(links_per_flow, L), replace=False)] = 1.0
+    kind = rng.choice([0, 1, 2], size=L, p=[0.4, 0.4, 0.2]).astype(np.int32)
+    prog = LinkProgram(
+        R=jnp.asarray(R),
+        capacity=jnp.asarray(rng.uniform(1.0, 50.0, L), jnp.float32),
+        kind=jnp.asarray(kind),
+    )
+    st = FlowState(*[jnp.asarray(rng.uniform(0, 10, F), jnp.float32)
+                     for _ in range(5)])
+    return prog, st
+
+
+@functools.partial(jax.jit, static_argnames=("dt",))
+def _vmap_rates(program, state, dt):
+    return _per_link_rates_vmap(program, state, dt)
+
+
+@functools.partial(jax.jit, static_argnames=("dt",))
+def _fused_rates(program, state, dt):
+    return _per_link_rates(program, state, dt)
+
+
+def run() -> list[dict]:
+    rows = []
+    sizes = [s for s in LINK_SIZES if not (SMOKE and s > 1_000)]
+    for L in sizes:
+        prog, st = _mk_problem(L)
+        iters = max(2, min(10, 20_000 // L))
+
+        us_sort = timeit_us(
+            lambda: jax.block_until_ready(
+                allocate(prog, st, dt=DT, solver="sort")), iters)
+        us_fused = timeit_us(
+            lambda: jax.block_until_ready(_fused_rates(prog, st, DT)), iters)
+        us_vmap = timeit_us(
+            lambda: jax.block_until_ready(_vmap_rates(prog, st, DT)), iters)
+        row = {
+            "name": f"alloc_L{L}",
+            "us_per_call": us_sort,
+            "n_links": L,
+            "n_flows": N_FLOWS,
+            "backend": jax.default_backend(),
+            "allocate_sort_us": round(us_sort, 1),
+            "per_link_fused_us": round(us_fused, 1),
+            "per_link_vmap_us": round(us_vmap, 1),
+            "fused_over_vmap": round(us_vmap / max(us_fused, 1e-9), 2),
+        }
+        # interpret-mode pallas walks the grid in python: keep CI (smoke)
+        # to the small grid, measure every size in full runs / on TPU
+        if jax.default_backend() == "tpu" or not SMOKE or L <= 100:
+            us_pal = timeit_us(
+                lambda: jax.block_until_ready(
+                    allocate(prog, st, dt=DT, solver="pallas")),
+                max(2, iters // 2))
+            row["allocate_pallas_us"] = round(us_pal, 1)
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    emit(run(), "allocator")
+
+
+if __name__ == "__main__":
+    main()

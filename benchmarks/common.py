@@ -1,6 +1,8 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -39,12 +41,24 @@ def multihop_topo(cap: float):
     return fat_tree(up=12.5).set_capacity(LinkKind.INTERNAL, cap)
 
 
+_JSON_ROWS: dict[str, list[dict]] = {}
+
+
 def emit(rows: list[dict], name: str) -> None:
-    """CSV to stdout: name,us_per_call,derived-metrics..."""
+    """CSV to stdout: name,us_per_call,derived-metrics...
+
+    Every section also accumulates into ``BENCH_<name>.json`` (in
+    ``BENCH_DIR``, default CWD) so CI can upload the per-PR perf trajectory
+    as a workflow artifact."""
     for r in rows:
         derived = ";".join(f"{k}={v}" for k, v in r.items()
                            if k not in ("name", "us_per_call"))
         print(f"{r.get('name', name)},{r.get('us_per_call', 0):.2f},{derived}")
+    _JSON_ROWS.setdefault(name, []).extend(rows)
+    path = os.path.join(os.environ.get("BENCH_DIR", "."),
+                        f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(_JSON_ROWS[name], f, indent=1, default=str)
 
 
 def timeit_us(fn, iters: int = 10) -> float:

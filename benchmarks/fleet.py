@@ -1,15 +1,18 @@
-"""Fleet engine benchmark: batched `simulate_many` vs a sequential
-`simulate` loop over the same scenarios.
+"""Fleet engine benchmark: batched `simulate_many` (shape-bucketed
+`FleetRunner`) vs a sequential `simulate` loop over the same scenarios.
 
 The sequential loop pays one XLA compile per distinct [F, L, I] shape plus
-per-scenario dispatch; the batched path compiles ONE vmapped scan and runs
-the whole fleet in a single fused program. Reports end-to-end wall-clock
-(first call, compile included — the realistic "run a study" cost) and
-steady-state (second call) speedups.
+per-scenario dispatch; the bucketed path compiles one vmapped scan per
+shape bucket and runs each bucket as a single fused program. Reports
+end-to-end wall-clock for the cold path (first call, compiles included —
+the realistic "run a fresh study" cost) and the steady-state warm path.
+Warm timings are the **median of WARM_REPS repeat calls**: post-compile
+calls are tens of milliseconds, where single-shot wall-clock on a shared
+CI core is noise-dominated.
 
-On CPU the scenario axis is additionally sharded across forced XLA host
-devices (one per core, up to 8), so the fleet runs genuinely in parallel —
-set BEFORE jax initializes, hence the env fiddling above the imports.
+On CPU the scenario axis is additionally split across forced XLA host
+devices (one per core, up to 8) via the runner's shard_map path — set
+BEFORE jax initializes, hence the env fiddling above the imports.
 
     PYTHONPATH=src python benchmarks/fleet.py
 """
@@ -26,6 +29,7 @@ if "jax" not in sys.modules:  # too late to force devices otherwise
     )
 
 import jax
+import numpy as np
 
 from benchmarks.common import emit
 from repro.streams import (
@@ -39,12 +43,21 @@ from repro.streams import (
 SECONDS = 60.0
 DT = 0.5
 N_EXTRA_RANDOM = 16  # on top of the 24-scenario seed corpus
+WARM_REPS = 5
 
 
 def _wall(fn):
     t0 = time.time()
     out = fn()
     return time.time() - t0, out
+
+
+def _wall_median(fn, reps: int):
+    ts, out = [], None
+    for _ in range(reps):
+        t, out = _wall(fn)
+        ts.append(t)
+    return float(np.median(ts)), out
 
 
 def run(policy: str = "appaware", seconds: float = SECONDS) -> list[dict]:
@@ -60,9 +73,9 @@ def run(policy: str = "appaware", seconds: float = SECONDS) -> list[dict]:
     # cold: includes compilation — what one pays for a fresh parameter study
     t_seq_cold, _ = _wall(sequential)
     t_bat_cold, _ = _wall(batched)
-    # warm: compile caches hot, pure execution
-    t_seq_warm, seq = _wall(sequential)
-    t_bat_warm, bat = _wall(batched)
+    # warm: compile caches hot, pure execution (median over repeat calls)
+    t_seq_warm, seq = _wall_median(sequential, WARM_REPS)
+    t_bat_warm, bat = _wall_median(batched, WARM_REPS)
 
     # sanity: batched results match the sequential loop
     worst = max(
@@ -78,8 +91,8 @@ def run(policy: str = "appaware", seconds: float = SECONDS) -> list[dict]:
         "seq_cold_s": round(t_seq_cold, 2),
         "batch_cold_s": round(t_bat_cold, 2),
         "speedup_cold": round(t_seq_cold / t_bat_cold, 2),
-        "seq_warm_s": round(t_seq_warm, 2),
-        "batch_warm_s": round(t_bat_warm, 2),
+        "seq_warm_s": round(t_seq_warm, 3),
+        "batch_warm_s": round(t_bat_warm, 3),
         "speedup_warm": round(t_seq_warm / t_bat_warm, 2),
         "max_tps_diff": f"{worst:.2e}",
     }]

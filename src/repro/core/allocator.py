@@ -110,8 +110,10 @@ class LinkProgram(NamedTuple):
     kind: jnp.ndarray       # [L] LinkKind values
 
 
-def _per_link_rates(program: LinkProgram, state: FlowState, dt: float):
-    """vmap the per-link solvers across ALL links; select by link kind."""
+def _per_link_rates_vmap(program: LinkProgram, state: FlowState, dt: float):
+    """Reference path: vmap the per-link solvers across ALL links; select by
+    link kind. One argsort *per link* — kept as the parity oracle for the
+    fused solve below (and for the Pallas kernel's CPU cross-check)."""
     w_up = state.uplink_demand()
     rho = state.drain_rate(dt)
     L_r = state.lr_t1
@@ -128,38 +130,106 @@ def _per_link_rates(program: LinkProgram, state: FlowState, dt: float):
     )
 
 
+def _per_link_rates(program: LinkProgram, state: FlowState, dt: float):
+    """Fused batched [L, F] solve of eqs. (3) and (4) for every link at once.
+
+    The per-flow inputs (demand w, backlog L^r, drain ρ) are shared by all
+    links — only the on-link mask differs — so the downlink water-filling
+    activation order ``θ_f = L_f/ρ_f`` is *one* global permutation. A single
+    ``argsort`` over the flow axis plus masked batched cumsums replaces the
+    per-link sorts of :func:`_per_link_rates_vmap`: per link, the prefix sums
+    over its masked flows in global θ-order equal the prefix sums over its
+    own sorted active set, so the unique consistent active prefix (and the
+    uplink proportional closed form) drop out of one [L, F] pass.
+    """
+    w_up = state.uplink_demand()
+    rho = jnp.maximum(state.drain_rate(dt), _EPS)
+    L_r = state.lr_t1
+    cap = program.capacity[:, None]                      # [L, 1]
+    mask = (program.R.T > 0).astype(w_up.dtype)          # [L, F]
+    F = mask.shape[1]
+
+    # ---- eq. (3): proportional-to-demand, all links at once -----------
+    wm = jnp.maximum(w_up, 0.0)[None, :] * mask
+    tot = jnp.sum(wm, axis=1, keepdims=True)
+    n = jnp.sum(mask, axis=1, keepdims=True)
+    wm = jnp.where(tot > _EPS, wm, mask)        # zero demand: equal split
+    tot = jnp.where(tot > _EPS, tot, jnp.maximum(n, 1.0))
+    x_up = cap * wm / tot
+
+    # ---- eq. (4): one global sort, batched prefix scans ---------------
+    theta_act = L_r / rho                                # [F]
+    order = jnp.argsort(theta_act)
+    th_s = theta_act[order]                              # [F]
+    rho_s = rho[order]
+    L_s = L_r[order]
+    m_s = mask[:, order]                                 # [L, F]
+    cum_rho = jnp.cumsum(rho_s[None, :] * m_s, axis=1)
+    cum_L = jnp.cumsum(L_s[None, :] * m_s, axis=1)
+    theta_k = (cap * dt + cum_L) / jnp.maximum(cum_rho, _EPS)
+    # active-set selection à la weighted simplex projection (Duchi et al.):
+    # the consistent prefix is the LARGEST masked k whose candidate level
+    # still covers its own activation point, θ_k ≥ θ̂_(k) — prefixes beyond
+    # it would include flows that the candidate level cannot activate
+    ks = jnp.arange(F)[None, :]
+    ok = (m_s > 0) & (theta_k >= th_s[None, :])
+    k_star = jnp.max(jnp.where(ok, ks, 0), axis=1)       # [L]
+    theta = jnp.take_along_axis(theta_k, k_star[:, None], axis=1)  # [L, 1]
+    x_dn = jnp.maximum(theta * rho[None, :] - L_r[None, :], 0.0) / dt * mask
+    s = jnp.sum(x_dn, axis=1, keepdims=True)
+    x_dn = jnp.where(s > _EPS, x_dn * (cap / s), x_dn)
+
+    is_down = (program.kind == int(LinkKind.DOWNLINK))[:, None]
+    return jnp.where(is_down, x_dn, x_up)
+
+
 def _per_link_rates_pallas(program: LinkProgram, state: FlowState, dt: float):
     """Same [L, F] solve through the batched Pallas waterfill kernel
     (``repro.kernels.waterfill``) — bisection on θ instead of the sort.
 
-    INTERNAL links are fed as uplinks; ``allocate`` never reads their rows
-    (it handles internal links by proportional scale-down), so only the
-    UPLINK/DOWNLINK selection has to agree with the exact solvers.
+    The per-flow state ships as [F] vectors (``waterfill_flows``); only the
+    on-link mask is [L, F], so no dense per-link broadcasts of w/backlog/ρ
+    are materialized. INTERNAL links are fed as uplinks; ``allocate`` never
+    reads their rows (it handles internal links by proportional
+    scale-down), so only the UPLINK/DOWNLINK selection has to agree with
+    the exact solvers.
     """
-    from repro.kernels.waterfill.ops import waterfill  # local: avoids cycle
+    from repro.kernels.waterfill.ops import waterfill_flows  # avoids cycle
 
     mask = (program.R.T > 0).astype(jnp.float32)          # [L, F]
-    w = jnp.broadcast_to(state.uplink_demand()[None, :], mask.shape)
-    backlog = jnp.broadcast_to(state.lr_t1[None, :], mask.shape)
-    rho = jnp.broadcast_to(state.drain_rate(dt)[None, :], mask.shape)
     kind01 = (program.kind == int(LinkKind.DOWNLINK)).astype(jnp.int32)
-    return waterfill(w, backlog, rho, mask, program.capacity, kind01, dt=dt)
+    # bigger link blocks at scale keep the grid small (10⁴ links / 128 =
+    # 79 programs); tiny programs keep the padding overhead low below that.
+    # The flow axis walks in 256-lane chunks once F outgrows one chunk, so
+    # F = 10³–10⁴ never runs its reductions over one giant lane block.
+    L, F = mask.shape
+    block_links = 8 if L <= 512 else 128
+    block_flows = None if F <= 256 else 256
+    return waterfill_flows(
+        state.uplink_demand(), state.lr_t1, state.drain_rate(dt),
+        mask, program.capacity, kind01, dt=dt, block_links=block_links,
+        block_flows=block_flows)
 
 
 def backfill(x: jnp.ndarray, program: LinkProgram, iters: int = 8,
              damping: float = 0.9) -> jnp.ndarray:
     """§VI-C backfill: hand leftover link capacity to flows proportionally to
-    their share from the previous pass, never violating any link."""
+    their share from the previous pass, never violating any link.
+
+    A flow's headroom min over its links of ``x_f·resid_l/load_l`` factors as
+    ``x_f · min_l(resid_l/load_l)`` (x ≥ 0), so each iteration reduces to one
+    [L] residual-ratio vector and one masked min — the [F, L] ``share`` and
+    ``gain`` intermediates of the naive form are never materialized.
+    """
     R, cap = program.R, program.capacity
+    on_link = R > 0
     on_net = jnp.sum(R, axis=1) > 0  # flows that traverse ≥1 link
 
     def body(_, x):
         load = x @ R                                   # [L]
-        resid = jnp.maximum(cap - load, 0.0)
-        share = x[:, None] / jnp.maximum(load, _EPS)[None, :]
-        gain = jnp.where(R > 0, share * resid[None, :], _INF)
-        inc = jnp.min(gain, axis=1)
-        inc = jnp.where(on_net & jnp.isfinite(inc), inc, 0.0)
+        ratio = jnp.maximum(cap - load, 0.0) / jnp.maximum(load, _EPS)
+        r_min = jnp.min(jnp.where(on_link, ratio[None, :], _INF), axis=1)
+        inc = jnp.where(on_net & jnp.isfinite(r_min), x * r_min, 0.0)
         return x + damping * inc
 
     return jax.lax.fori_loop(0, iters, body, x)
@@ -187,14 +257,12 @@ def allocate(
         raise ValueError(f"unknown solver {solver!r}")
     kind = program.kind
 
-    def min_over(mask_kind):
-        sel = (kind == mask_kind)[:, None] & (program.R.T > 0)
-        vals = jnp.where(sel, per_link, _INF)
-        return jnp.min(vals, axis=0)
-
-    x_u = min_over(int(LinkKind.UPLINK))       # [F] (∞ if no uplink)
-    x_d = min_over(int(LinkKind.DOWNLINK))
-    x = jnp.minimum(x_u, x_d)                  # Alg. 1 line 22
+    # Alg. 1 line 22 collapsed: min(x^u, x^d) over a flow's links is the min
+    # of per_link over its non-internal links (each row already carries the
+    # kind-appropriate solve), so one masked reduction replaces the two
+    # per-kind passes.
+    sel = (kind != int(LinkKind.INTERNAL))[:, None] & (program.R.T > 0)
+    x = jnp.min(jnp.where(sel, per_link, _INF), axis=0)
     x = jnp.where(jnp.isfinite(x), x, 0.0)     # flows with no links: handled by caller
 
     # Internal links: proportional scale-down, min across links (lines 24-29)

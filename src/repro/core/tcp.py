@@ -3,9 +3,11 @@
 The paper's baseline is the default transport of Storm/Heron/Flink — TCP
 congestion control, which (idealized) converges to max-min fair rates among
 flows sharing bottleneck links. We implement exact max-min via progressive
-filling on the routing matrix: repeatedly find the tightest link, freeze its
-flows at the fair share, remove the link, repeat. Runs in ≤ L iterations;
-implemented with `lax.fori_loop` so it jits and batches.
+filling on the routing matrix: per round, find the tightest fair share and
+freeze every link (and its flows) at that water level, repeat. Implemented
+with `lax.while_loop` so it jits and batches; the trip count tracks the
+number of distinct bottleneck *levels* (typically a handful), not the link
+count — padded links in the fleet engine never bind and cost nothing.
 """
 from __future__ import annotations
 
@@ -32,28 +34,36 @@ def maxmin_rates(R: jnp.ndarray, capacity: jnp.ndarray,
     active = active.astype(R.dtype)
     on_net = (jnp.sum(R, axis=1) > 0) & (active > 0)
 
-    def body(_, carry):
-        x, frozen, link_done = carry
+    def body(carry):
+        x, frozen, link_done, _ = carry
         unfrozen = (~frozen) & on_net
         n_l = jnp.sum(R * unfrozen[:, None].astype(R.dtype), axis=0)      # [L]
         used = jnp.sum(R * (x * frozen.astype(R.dtype))[:, None], axis=0)  # [L]
         resid = jnp.maximum(capacity - used, 0.0)
         fair = jnp.where((n_l > 0) & (~link_done), resid / jnp.maximum(n_l, 1.0), _INF)
-        l_star = jnp.argmin(fair)
-        share = fair[l_star]
+        share = jnp.min(fair)
         any_left = jnp.isfinite(share)
-        hit = (R[:, l_star] > 0) & unfrozen & any_left
+        # freeze EVERY link attaining the current water level at once
+        # (classic progressive filling fills all tightest links together:
+        # their unfrozen flows get the same share either way, so one round
+        # per *bottleneck level* instead of one per bottleneck link)
+        tight = (fair <= share) & any_left                           # [L]
+        hit = jnp.any(R * tight[None, :].astype(R.dtype), axis=1) & unfrozen
         x = jnp.where(hit, share, x)
         frozen = frozen | hit
-        # one-hot instead of .at[l_star].set: batched scatters compile
-        # poorly on CPU when this whole solve is vmapped (fleet engine)
-        link_done = link_done | ((jnp.arange(L) == l_star) & any_left)
-        return x, frozen, link_done
+        link_done = link_done | tight
+        return x, frozen, link_done, any_left
 
     x0 = jnp.zeros((F,), R.dtype)
     frozen0 = jnp.zeros((F,), bool)
     done0 = jnp.zeros((L,), bool)
-    x, frozen, _ = jax.lax.fori_loop(0, L, body, (x0, frozen0, done0))
+    # while-loop instead of a fixed L-trip fori: each round freezes one
+    # water level, and the loop exits as soon as no link has unfrozen
+    # flows left — so the trip count tracks the scenario's *real* bottleneck
+    # structure (#levels), not the (possibly padded — fleet engine) link
+    # count. The body is idempotent once nothing binds.
+    x, frozen, _, _ = jax.lax.while_loop(
+        lambda c: c[3], body, (x0, frozen0, done0, jnp.array(True)))
     # flows not on any congested link (or off-net): unconstrained
     x = jnp.where(on_net & ~frozen, _INF, x)
     x = jnp.where(on_net, x, jnp.where(active > 0, _INF, 0.0))

@@ -4,12 +4,19 @@ At datacenter scale the allocator solves one small optimization per
 bottlenecked link every Δt — thousands of links × thousands of flows. That
 inner loop is this kernel. TPU adaptation (DESIGN.md): the exact sort-based
 water-filling used on CPU is replaced with **fixed-iteration bisection on
-θ** — sorts are lane-hostile on the VPU, while bisection is 40 rounds of
+θ** — sorts are lane-hostile on the VPU, while bisection is 48 rounds of
 pure vector ops on a [links_block × flows] tile resident in VMEM.
 
-Tiling: grid over link blocks; each program holds (BL, F) tiles of
-weights/backlog/rho/mask plus (BL, 1) capacity/kind in VMEM. F is padded to
-a lane multiple (128) by ``ops.py``; padded flows carry mask 0.
+Tiling: grid over link blocks; each program holds a (BL, F) mask tile plus
+(BL, 1) capacity/kind in VMEM. The per-flow inputs (demand w, backlog L^r,
+drain ρ) are the *same* for every link, so they ship as (1, F) rows mapped
+to every grid step instead of dense [L, F] broadcasts (the allocator path;
+``ops.waterfill`` still accepts per-link dense inputs for the oracle
+cross-checks). Inside a program the flow axis is walked in ``block_flows``
+chunks — F is VMEM-resident either way, but the chunking bounds the vector
+working set per op so F = 10³–10⁴ doesn't force one giant lane block
+through every reduction. F is padded to a lane/chunk multiple by
+``ops.py``; padded flows carry mask 0.
 """
 from __future__ import annotations
 
@@ -24,65 +31,111 @@ _EPS = 1e-9
 
 
 def _waterfill_block(w_ref, L_ref, r_ref, m_ref, cap_ref, kind_ref, out_ref,
-                     *, dt: float):
-    w = w_ref[...].astype(jnp.float32)
-    L = L_ref[...].astype(jnp.float32)
-    rho = jnp.maximum(r_ref[...].astype(jnp.float32), _EPS)
-    m = m_ref[...].astype(jnp.float32)
+                     *, dt: float, block_flows: int):
+    """One link block. w/L/r refs are (1, F) shared rows or (BL, F) dense;
+    broadcasting against the (BL, BF) mask chunks covers both layouts."""
+    F = m_ref.shape[1]
+    nT = F // block_flows
     cap = cap_ref[...].astype(jnp.float32)          # [BL, 1]
     kind = kind_ref[...]                            # [BL, 1] int32
+    zcol = jnp.zeros_like(cap)
 
-    # ---- eq. (3): proportional-to-demand (uplinks) --------------------
-    wm = jnp.maximum(w, 0.0) * m
-    tot = jnp.sum(wm, axis=1, keepdims=True)
-    n = jnp.sum(m, axis=1, keepdims=True)
-    wm = jnp.where(tot > _EPS, wm, m)               # zero demand: equal split
-    tot = jnp.where(tot > _EPS, tot, jnp.maximum(n, 1.0))
-    x_up = cap * wm / tot
+    def tile(t):
+        sl = pl.ds(t * block_flows, block_flows)
+        w = w_ref[:, sl].astype(jnp.float32)
+        L = L_ref[:, sl].astype(jnp.float32)
+        rho = jnp.maximum(r_ref[:, sl].astype(jnp.float32), _EPS)
+        m = m_ref[:, sl].astype(jnp.float32)
+        return w, L, rho, m
+
+    # ---- pass 1: per-link reductions over flow chunks -----------------
+    def reduce_chunk(t, c):
+        s_w, s_m, s_rho, mx = c
+        w, L, rho, m = tile(t)
+        wm = jnp.maximum(w, 0.0) * m
+        th = jnp.where(m > 0, L / rho, 0.0)          # activation points
+        return (s_w + jnp.sum(wm, axis=1, keepdims=True),
+                s_m + jnp.sum(m, axis=1, keepdims=True),
+                s_rho + jnp.sum(rho * m, axis=1, keepdims=True),
+                jnp.maximum(mx, jnp.max(th, axis=1, keepdims=True)))
+
+    s_w, s_m, s_rho, mx_th = jax.lax.fori_loop(
+        0, nT, reduce_chunk, (zcol, zcol, zcol, zcol))
 
     # ---- eq. (4): drain-time equalization via bisection (downlinks) ---
-    theta_act = jnp.where(m > 0, L / rho, 0.0)
-    lo = jnp.zeros_like(cap)
-    sum_rho = jnp.sum(rho * m, axis=1, keepdims=True)
-    hi = (jnp.max(theta_act, axis=1, keepdims=True)
-          + cap * dt / jnp.maximum(sum_rho, _EPS) + 1.0)
+    hi0 = mx_th + cap * dt / jnp.maximum(s_rho, _EPS) + 1.0
 
-    def body(_, carry):
-        lo, hi = carry
+    def bisect(_, lohi):
+        lo, hi = lohi
         mid = 0.5 * (lo + hi)
-        alloc = jnp.sum(jnp.maximum(mid * rho - L, 0.0) * m / dt,
-                        axis=1, keepdims=True)
+
+        def acc(t, s):
+            _, L, rho, m = tile(t)
+            return s + jnp.sum(jnp.maximum(mid * rho - L, 0.0) * m,
+                               axis=1, keepdims=True)
+
+        alloc = jax.lax.fori_loop(0, nT, acc, zcol) / dt
         too_much = alloc > cap
         return jnp.where(too_much, lo, mid), jnp.where(too_much, mid, hi)
 
-    lo, hi = jax.lax.fori_loop(0, N_BISECT, body, (lo, hi))
+    lo, hi = jax.lax.fori_loop(0, N_BISECT, bisect, (zcol, hi0))
     theta = 0.5 * (lo + hi)
-    x_down = jnp.maximum(theta * rho - L, 0.0) * m / dt
-    # exact capacity: renormalize residual bisection error
-    s = jnp.sum(x_down, axis=1, keepdims=True)
-    x_down = jnp.where(s > _EPS, x_down * (cap / s), x_down)
 
-    out_ref[...] = jnp.where(kind == 1, x_down, x_up).astype(out_ref.dtype)
+    # downlink mass at θ: renormalize residual bisection error to capacity
+    def mass(t, s):
+        _, L, rho, m = tile(t)
+        return s + jnp.sum(jnp.maximum(theta * rho - L, 0.0) * m,
+                           axis=1, keepdims=True)
+
+    s_dn = jax.lax.fori_loop(0, nT, mass, zcol) / dt
+    dn_scale = jnp.where(s_dn > _EPS, cap / s_dn, 1.0)
+
+    # ---- eq. (3) scalars: zero demand falls back to equal split -------
+    up_fb = s_w <= _EPS
+    up_den = jnp.where(up_fb, jnp.maximum(s_m, 1.0), s_w)
+
+    def emit(t, _):
+        sl = pl.ds(t * block_flows, block_flows)
+        w, L, rho, m = tile(t)
+        wm = jnp.where(up_fb, m, jnp.maximum(w, 0.0) * m)
+        x_up = cap * wm / up_den
+        x_dn = jnp.maximum(theta * rho - L, 0.0) * m / dt * dn_scale
+        out_ref[:, sl] = jnp.where(kind == 1, x_dn, x_up).astype(out_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, nT, emit, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("dt", "block_links", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("dt", "block_links", "block_flows", "interpret"))
 def waterfill_pallas(weights, backlog, rho, mask, capacity, kind,
                      dt: float = 1.0, block_links: int = 8,
+                     block_flows: int | None = None,
                      interpret: bool = False):
-    """weights/backlog/rho/mask: [L, F] (F a multiple of 128 — see ops.py);
-    capacity: [L]; kind: [L] int32 (0 uplink / 1 downlink). -> [L, F]."""
-    Lnum, F = weights.shape
+    """mask: [L, F] (F a multiple of 128 and of ``block_flows`` — see
+    ops.py); weights/backlog/rho: [F] per-flow vectors (shared across links)
+    or dense [L, F]; capacity: [L]; kind: [L] int32 (0 uplink / 1 downlink).
+    -> [L, F]."""
+    Lnum, F = mask.shape
     assert Lnum % block_links == 0, (Lnum, block_links)
+    bf = F if block_flows is None else block_flows
+    assert F % bf == 0, (F, bf)
     cap2 = capacity.reshape(Lnum, 1).astype(jnp.float32)
     kind2 = kind.reshape(Lnum, 1).astype(jnp.int32)
 
     grid = (Lnum // block_links,)
     row = pl.BlockSpec((block_links, F), lambda i: (i, 0))
     col = pl.BlockSpec((block_links, 1), lambda i: (i, 0))
+    if weights.ndim == 1:  # per-flow vectors: one shared (1, F) row
+        weights, backlog, rho = (
+            a.reshape(1, F) for a in (weights, backlog, rho))
+        flow = pl.BlockSpec((1, F), lambda i: (0, 0))
+    else:
+        flow = row
     return pl.pallas_call(
-        functools.partial(_waterfill_block, dt=dt),
+        functools.partial(_waterfill_block, dt=dt, block_flows=bf),
         grid=grid,
-        in_specs=[row, row, row, row, col, col],
+        in_specs=[flow, flow, flow, row, col, col],
         out_specs=row,
         out_shape=jax.ShapeDtypeStruct((Lnum, F), jnp.float32),
         interpret=interpret,

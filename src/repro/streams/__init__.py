@@ -8,6 +8,7 @@ from repro.streams.app import (  # noqa: F401
     source_sink_paths,
 )
 from repro.streams.fleet import (  # noqa: F401
+    FleetRunner,
     FleetShape,
     pad_sim,
     simulate_many,

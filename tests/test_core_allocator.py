@@ -16,6 +16,11 @@ from repro.core import (
     group_by_throughput,
     ewma_throughput,
 )
+from repro.core.allocator import (
+    LinkProgram,
+    _per_link_rates,
+    _per_link_rates_vmap,
+)
 from repro.net import big_switch, fat_tree, LinkKind
 
 
@@ -97,6 +102,142 @@ class TestDownlink:
             np.testing.assert_allclose(drain[pos], theta, rtol=5e-3)
             if (~pos).sum():
                 assert np.all(drain[~pos] >= theta * (1 - 5e-3))
+
+
+# ---------------------------------------------------- fused per-link solve
+def _rand_program(rng, F, L, p=0.4, zero_cap_frac=0.0):
+    R = (rng.random((F, L)) < p).astype(np.float32)
+    caps = rng.uniform(0.0, 50.0, L)
+    if zero_cap_frac:
+        caps[rng.random(L) < zero_cap_frac] = 0.0
+    return LinkProgram(
+        R=jnp.asarray(R),
+        capacity=jnp.asarray(caps, jnp.float32),
+        kind=jnp.asarray(rng.integers(0, 3, L), jnp.int32),
+    )
+
+
+def _rand_flowstate(rng, n):
+    return FlowState(
+        *[jnp.asarray(rng.uniform(0, 10, n), jnp.float32) for _ in range(5)])
+
+
+class TestFusedPerLinkRates:
+    """The fused single-argsort batched solve must equal the per-link vmap
+    reference (`_per_link_rates_vmap`) to 1e-5 on every link row."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_property_parity_random(self, seed):
+        rng = np.random.default_rng(seed)
+        F, L = int(rng.integers(1, 48)), int(rng.integers(1, 32))
+        prog = _rand_program(rng, F, L, p=float(rng.uniform(0.1, 0.9)))
+        state = _rand_flowstate(rng, F)
+        dt = float(rng.choice([0.5, 1.0, 5.0]))
+        a = np.asarray(_per_link_rates(prog, state, dt))
+        b = np.asarray(_per_link_rates_vmap(prog, state, dt))
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+    def test_all_internal_links(self):
+        # INTERNAL-only programs take the uplink closed form on every row
+        rng = np.random.default_rng(0)
+        F, L = 9, 5
+        prog = _rand_program(rng, F, L)
+        prog = LinkProgram(prog.R, prog.capacity,
+                           jnp.full((L,), int(LinkKind.INTERNAL), jnp.int32))
+        state = _rand_flowstate(rng, F)
+        np.testing.assert_allclose(
+            np.asarray(_per_link_rates(prog, state, 1.0)),
+            np.asarray(_per_link_rates_vmap(prog, state, 1.0)), atol=1e-5)
+
+    def test_zero_demand(self):
+        rng = np.random.default_rng(1)
+        F, L = 7, 6
+        prog = _rand_program(rng, F, L)
+        z = jnp.zeros((F,), jnp.float32)
+        state = FlowState(z, z, z, z, z)
+        a = np.asarray(_per_link_rates(prog, state, 0.5))
+        b = np.asarray(_per_link_rates_vmap(prog, state, 0.5))
+        np.testing.assert_allclose(a, b, atol=1e-5)
+        # equal-split fallback still fills every masked uplink exactly
+        up = np.asarray(prog.kind) != int(LinkKind.DOWNLINK)
+        mask = np.asarray(prog.R).T > 0
+        has = mask.any(1) & up
+        np.testing.assert_allclose(
+            a.sum(1)[has], np.asarray(prog.capacity)[has], rtol=1e-5)
+
+    def test_single_flow(self):
+        rng = np.random.default_rng(2)
+        prog = _rand_program(rng, 1, 4, p=1.0)
+        state = _rand_flowstate(rng, 1)
+        np.testing.assert_allclose(
+            np.asarray(_per_link_rates(prog, state, 1.0)),
+            np.asarray(_per_link_rates_vmap(prog, state, 1.0)), atol=1e-5)
+
+    def test_zero_capacity_links(self):
+        rng = np.random.default_rng(3)
+        prog = _rand_program(rng, 12, 8, zero_cap_frac=0.5)
+        state = _rand_flowstate(rng, 12)
+        a = np.asarray(_per_link_rates(prog, state, 1.0))
+        b = np.asarray(_per_link_rates_vmap(prog, state, 1.0))
+        np.testing.assert_allclose(a, b, atol=1e-5)
+        dead = np.asarray(prog.capacity) == 0.0
+        assert np.abs(a[dead]).max() == 0.0
+
+    def test_backfill_matches_naive_form(self):
+        # lean backfill == the naive [F, L] share/gain formulation
+        from repro.core.allocator import backfill, _EPS
+
+        rng = np.random.default_rng(5)
+        F, L = 10, 6
+        prog = _rand_program(rng, F, L, p=0.5)
+        x0 = rng.uniform(0, 3, F).astype(np.float32)
+
+        R, cap = np.asarray(prog.R), np.asarray(prog.capacity)
+        on_net = R.sum(1) > 0
+        x = x0.copy()
+        for _ in range(8):
+            load = x @ R
+            resid = np.maximum(cap - load, 0.0)
+            share = x[:, None] / np.maximum(load, _EPS)[None, :]
+            gain = np.where(R > 0, share * resid[None, :], np.inf)
+            inc = gain.min(axis=1)
+            inc = np.where(on_net & np.isfinite(inc), inc, 0.0)
+            x = x + 0.9 * inc
+        np.testing.assert_allclose(
+            np.asarray(backfill(jnp.asarray(x0), prog, iters=8)), x,
+            rtol=1e-5, atol=1e-5)
+
+    def test_allocate_end_to_end_unchanged(self):
+        # the fused pipeline (single masked kind-min + lean backfill) must
+        # reproduce the reference composition built from the vmap solver
+        from repro.core.allocator import allocate, backfill, _EPS, _INF
+
+        rng = np.random.default_rng(4)
+        F, L = 15, 10
+        prog = _rand_program(rng, F, L)
+        state = _rand_flowstate(rng, F)
+
+        per_link = _per_link_rates_vmap(prog, state, 1.0)
+        kind = prog.kind
+
+        def min_over(mask_kind):  # the pre-fusion two-pass reduction
+            sel = (kind == mask_kind)[:, None] & (prog.R.T > 0)
+            return jnp.min(jnp.where(sel, per_link, _INF), axis=0)
+
+        x = jnp.minimum(min_over(int(LinkKind.UPLINK)),
+                        min_over(int(LinkKind.DOWNLINK)))
+        x = jnp.where(jnp.isfinite(x), x, 0.0)
+        load = x @ prog.R
+        is_int = kind == int(LinkKind.INTERNAL)
+        scale_l = jnp.where(is_int & (load > prog.capacity),
+                            prog.capacity / jnp.maximum(load, _EPS), 1.0)
+        x = x * jnp.where((prog.R > 0) & is_int[None, :],
+                          scale_l[None, :], 1.0).min(axis=1)
+        ref = backfill(x, prog, iters=8)
+        np.testing.assert_allclose(
+            np.asarray(allocate(prog, state, dt=1.0)), np.asarray(ref),
+            atol=1e-4)
 
 
 # ------------------------------------------------------------- Algorithm 1

@@ -6,6 +6,7 @@ import pytest
 
 from repro.net import big_switch
 from repro.streams import (
+    FleetRunner,
     FleetShape,
     compile_fleet,
     compile_sim,
@@ -19,6 +20,7 @@ from repro.streams import (
     trending_topics,
     trucking_iot,
 )
+from repro.streams.fleet import _plan_buckets, _sim_shape
 
 SECONDS = 40.0
 DT = 0.5
@@ -98,6 +100,62 @@ class TestBatchParity:
         with pytest.raises(ValueError, match="x_fixed"):
             simulate_many(fleet_sims[:2], "fixed", seconds=5.0,
                           x_fixed=[np.ones(4, np.float32)])
+
+
+class TestFleetRunner:
+    def test_bucket_plan_covers_each_sim_once(self, fleet_sims):
+        for k in (1, 2, 4, 8):
+            plan = _plan_buckets(fleet_sims, k, exact_apps=False)
+            assert len(plan) <= max(k, 1)
+            seen = sorted(i for idxs, _ in plan for i in idxs)
+            assert seen == list(range(len(fleet_sims)))
+            for idxs, shape in plan:
+                for i in idxs:  # bucket shape covers every member
+                    s = _sim_shape(fleet_sims[i])
+                    assert all(a <= b for a, b in zip(
+                        (s.n_flows, s.n_links, s.n_insts, s.n_paths,
+                         s.n_apps),
+                        (shape.n_flows, shape.n_links, shape.n_insts,
+                         shape.n_paths, shape.n_apps)))
+
+    def test_no_recompile_on_repeat_calls(self, fleet_sims):
+        runner = FleetRunner()
+        runner.run(fleet_sims, "tcp", seconds=5.0, dt=DT)
+        size = runner.compile_cache_size()
+        assert size > 0
+        out2 = runner.run(fleet_sims, "tcp", seconds=5.0, dt=DT)
+        out3 = runner.run(list(fleet_sims), "tcp", seconds=5.0, dt=DT)
+        assert runner.compile_cache_size() == size  # jit cache-miss counter
+        for a, b in zip(out2, out3):
+            np.testing.assert_array_equal(a.sink_mb, b.sink_mb)
+
+    def test_runner_matches_sequential(self, fleet_sims):
+        runner = FleetRunner(max_buckets=3)
+        batch = runner.run(fleet_sims[:6], "tcp", seconds=20.0, dt=DT)
+        for sim, rb in zip(fleet_sims[:6], batch):
+            ref = simulate(sim, "tcp", seconds=20.0, dt=DT)
+            np.testing.assert_allclose(rb.sink_mb, ref.sink_mb, atol=1e-4)
+
+
+def _two_app_sim(n_apps: int, cap: float, seed: int = 0):
+    g = parallelize(trending_topics(), seed=seed)
+    app_of_inst = (np.arange(g.n_instances) % n_apps).astype(np.int32)
+    return compile_sim(g, big_switch(8, cap), round_robin(g, 8),
+                       app_of_inst=app_of_inst, n_apps=n_apps)
+
+
+class TestAppfairMixedApps:
+    def test_heterogeneous_n_apps_batch_parity(self):
+        # pre-PR this raised ValueError; the runner now buckets appfair
+        # fleets by exact app count, so mixed-n_apps fleets batch exactly
+        sims = [_two_app_sim(2, 1.25), _two_app_sim(3, 1.875),
+                _two_app_sim(2, 2.5)]
+        batch = simulate_many(sims, "appfair", seconds=SECONDS, dt=DT)
+        for sim, rb in zip(sims, batch):
+            ref = simulate(sim, "appfair", seconds=SECONDS, dt=DT)
+            np.testing.assert_allclose(rb.sink_mb, ref.sink_mb, atol=1e-4)
+            np.testing.assert_allclose(rb.sink_mb_app, ref.sink_mb_app,
+                                       atol=1e-4)
 
 
 class TestEndToEndRegression:

@@ -14,7 +14,11 @@ from repro.kernels.flash_attention.ops import (
     flash_attention_reference,
 )
 from repro.kernels.ssd_scan.ops import ssd_scan, ssd_reference
-from repro.kernels.waterfill.ops import waterfill, waterfill_reference
+from repro.kernels.waterfill.ops import (
+    waterfill,
+    waterfill_flows,
+    waterfill_reference,
+)
 
 
 # ------------------------------------------------------------- waterfill
@@ -84,6 +88,58 @@ class TestWaterfill:
             *(jnp.asarray(a) for a in (w, bl, rho, mask, cap, kind)), 0.5))
         np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
         np.testing.assert_allclose(out[np.arange(L), keep], cap, rtol=1e-3)
+
+    def test_vector_inputs_match_dense(self):
+        # waterfill_flows([F] vectors) == waterfill on the dense broadcasts
+        rng = np.random.default_rng(3)
+        L, F = 10, 150
+        w = rng.uniform(0, 20, F).astype(np.float32)
+        bl = rng.uniform(0, 30, F).astype(np.float32)
+        rho = rng.uniform(0.1, 10, F).astype(np.float32)
+        mask = (rng.random((L, F)) < 0.6).astype(np.float32)
+        cap = rng.uniform(1, 50, L).astype(np.float32)
+        kind = rng.integers(0, 2, L).astype(np.int32)
+        dense = lambda v: np.broadcast_to(v[None, :], (L, F)).copy()
+        out_v = np.asarray(waterfill_flows(w, bl, rho, mask, cap, kind,
+                                           dt=0.5))
+        out_d = np.asarray(waterfill(dense(w), dense(bl), dense(rho), mask,
+                                     cap, kind, dt=0.5))
+        np.testing.assert_allclose(out_v, out_d, rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("block_flows", [128, 256])
+    def test_block_flows_tiling_independence(self, block_flows):
+        # chunked flow-axis traversal must not change the solve
+        rng = np.random.default_rng(4)
+        L, F = 8, 300
+        w = rng.uniform(0, 20, (L, F)).astype(np.float32)
+        bl = rng.uniform(0, 30, (L, F)).astype(np.float32)
+        rho = rng.uniform(0.1, 10, (L, F)).astype(np.float32)
+        mask = (rng.random((L, F)) < 0.7).astype(np.float32)
+        cap = rng.uniform(1, 50, L).astype(np.float32)
+        kind = rng.integers(0, 2, L).astype(np.int32)
+        a = np.asarray(waterfill(w, bl, rho, mask, cap, kind, dt=1.0))
+        b = np.asarray(waterfill(w, bl, rho, mask, cap, kind, dt=1.0,
+                                 block_flows=block_flows))
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+    def test_padding_is_jit_cached(self):
+        # repeat same-shape calls reuse the padded executable (the pad ops
+        # trace once; no per-call un-jitted jnp.pad dispatch chain)
+        from repro.kernels.waterfill.ops import _waterfill_padded
+
+        rng = np.random.default_rng(5)
+        L, F = 6, 37
+        args = (rng.uniform(0, 5, (L, F)).astype(np.float32),
+                rng.uniform(0, 5, (L, F)).astype(np.float32),
+                rng.uniform(0.1, 5, (L, F)).astype(np.float32),
+                np.ones((L, F), np.float32),
+                rng.uniform(1, 9, L).astype(np.float32),
+                np.zeros(L, np.int32))
+        waterfill(*args, dt=1.0)
+        size = _waterfill_padded._cache_size()
+        for _ in range(3):
+            waterfill(*args, dt=1.0)
+        assert _waterfill_padded._cache_size() == size
 
     @settings(max_examples=15, deadline=None)
     @given(seed=st.integers(0, 10_000))
