@@ -86,6 +86,13 @@ def run() -> list[dict]:
             lambda: jax.block_until_ready(_fused_rates(prog, st, DT)), iters)
         us_vmap = timeit_us(
             lambda: jax.block_until_ready(_vmap_rates(prog, st, DT)), iters)
+        # chunked-links variant: bounded [block, F] working set — the
+        # memory-capped path for datacenter link counts
+        blk = min(L, 256)
+        us_chunk = timeit_us(
+            lambda: jax.block_until_ready(
+                allocate(prog, st, dt=DT, solver="sort", block_links=blk)),
+            iters)
         row = {
             "name": f"alloc_L{L}",
             "us_per_call": us_sort,
@@ -93,6 +100,8 @@ def run() -> list[dict]:
             "n_flows": N_FLOWS,
             "backend": jax.default_backend(),
             "allocate_sort_us": round(us_sort, 1),
+            "allocate_chunked_us": round(us_chunk, 1),
+            "block_links": blk,
             "per_link_fused_us": round(us_fused, 1),
             "per_link_vmap_us": round(us_vmap, 1),
             "fused_over_vmap": round(us_vmap / max(us_fused, 1e-9), 2),

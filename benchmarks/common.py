@@ -5,17 +5,9 @@ import json
 import os
 import time
 
-import numpy as np
 
 from repro.net import LinkKind, big_switch, fat_tree
-from repro.streams import (
-    compile_sim,
-    parallelize,
-    round_robin,
-    simulate,
-    trending_topics,
-    trucking_iot,
-)
+from repro.streams import compile_sim, parallelize, round_robin, simulate
 
 CAPS = {"10Mbps": 1.25, "15Mbps": 1.875, "20Mbps": 2.5}
 SECONDS = 600.0
@@ -44,18 +36,24 @@ def multihop_topo(cap: float):
 _JSON_ROWS: dict[str, list[dict]] = {}
 
 
+# repo root: BENCH_*.json always lands here (full *and* smoke mode, any
+# CWD) so the per-PR perf trajectory is never silently empty; override
+# with BENCH_DIR for scratch runs
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
 def emit(rows: list[dict], name: str) -> None:
     """CSV to stdout: name,us_per_call,derived-metrics...
 
     Every section also accumulates into ``BENCH_<name>.json`` (in
-    ``BENCH_DIR``, default CWD) so CI can upload the per-PR perf trajectory
-    as a workflow artifact."""
+    ``BENCH_DIR``, default the repo root) so CI can upload the per-PR perf
+    trajectory as a workflow artifact."""
     for r in rows:
         derived = ";".join(f"{k}={v}" for k, v in r.items()
                            if k not in ("name", "us_per_call"))
         print(f"{r.get('name', name)},{r.get('us_per_call', 0):.2f},{derived}")
     _JSON_ROWS.setdefault(name, []).extend(rows)
-    path = os.path.join(os.environ.get("BENCH_DIR", "."),
+    path = os.path.join(os.environ.get("BENCH_DIR", _REPO_ROOT),
                         f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump(_JSON_ROWS[name], f, indent=1, default=str)

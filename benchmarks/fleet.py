@@ -34,10 +34,12 @@ import numpy as np
 from benchmarks.common import emit
 from repro.streams import (
     compile_fleet,
+    link_failure_sweep,
     random_scenarios,
     seed_fleet,
     simulate,
     simulate_many,
+    time_varying_sweep,
 )
 
 SECONDS = 60.0
@@ -98,9 +100,52 @@ def run(policy: str = "appaware", seconds: float = SECONDS) -> list[dict]:
     }]
 
 
+def run_dynamics(policy: str = "tcp", seconds: float = SECONDS) -> list[dict]:
+    """Scheduled-caps machinery cost vs static: the *identical* scenarios
+    once with no schedule and once with a constant (no-op) schedule. A
+    constant schedule produces bitwise-identical trajectories but takes
+    the full dynamic path — [T, L] capacity stream into the scan plus
+    per-tick enforcement — so the ratio isolates exactly what in-run
+    dynamics cost, with zero workload difference (a real failure schedule
+    would also change queue dynamics and the max-min solver's
+    data-dependent trip counts, conflating workload with machinery)."""
+    import dataclasses
+
+    from repro.net import LinkSchedule
+
+    scens = (link_failure_sweep(n=4, seed=7, in_run=True)
+             + time_varying_sweep(n_phases=4, seed=7, in_run=True))
+    static = compile_fleet(
+        [dataclasses.replace(s, schedule=None) for s in scens])
+    sched = compile_fleet(
+        [dataclasses.replace(s,
+                             schedule=LinkSchedule.constant(s.topo.n_links))
+         for s in scens])
+
+    def run_static():
+        return simulate_many(static, policy, seconds=seconds, dt=DT)
+
+    def run_sched():
+        return simulate_many(sched, policy, seconds=seconds, dt=DT)
+
+    run_static(), run_sched()  # compile both paths
+    t_static, _ = _wall_median(run_static, WARM_REPS)
+    t_sched, _ = _wall_median(run_sched, WARM_REPS)
+    return [{
+        "name": f"fleet_dynamics_{policy}",
+        "us_per_call": t_sched * 1e6,
+        "n_scenarios": len(sched),
+        "backend": jax.default_backend(),
+        "static_warm_s": round(t_static, 3),
+        "scheduled_warm_s": round(t_sched, 3),
+        "sched_overhead": round(t_sched / max(t_static, 1e-9), 2),
+    }]
+
+
 def main() -> None:
     for policy in ("tcp", "appaware"):
         emit(run(policy), "fleet")
+    emit(run_dynamics("tcp"), "fleet")
 
 
 if __name__ == "__main__":

@@ -12,7 +12,7 @@ from benchmarks.common import emit, timeit_us
 from repro.core import FlowState, OnlineAllocator, maxmin_rates
 from repro.kernels.waterfill.ops import waterfill
 from repro.net import fat_tree
-from repro.streams import compile_sim, parallelize, round_robin, trending_topics
+from repro.streams import parallelize, round_robin, trending_topics
 
 
 def run() -> list[dict]:

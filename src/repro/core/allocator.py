@@ -130,57 +130,106 @@ def _per_link_rates_vmap(program: LinkProgram, state: FlowState, dt: float):
     )
 
 
-def _per_link_rates(program: LinkProgram, state: FlowState, dt: float):
-    """Fused batched [L, F] solve of eqs. (3) and (4) for every link at once.
-
-    The per-flow inputs (demand w, backlog L^r, drain ρ) are shared by all
+def _flow_sort_ctx(state: FlowState, dt: float):
+    """Flow-axis preprocessing shared by every link of a solve: the
+    per-flow inputs (demand w, backlog L^r, drain ρ) are the same for all
     links — only the on-link mask differs — so the downlink water-filling
-    activation order ``θ_f = L_f/ρ_f`` is *one* global permutation. A single
-    ``argsort`` over the flow axis plus masked batched cumsums replaces the
-    per-link sorts of :func:`_per_link_rates_vmap`: per link, the prefix sums
-    over its masked flows in global θ-order equal the prefix sums over its
-    own sorted active set, so the unique consistent active prefix (and the
-    uplink proportional closed form) drop out of one [L, F] pass.
-    """
-    w_up = state.uplink_demand()
+    activation order ``θ_f = L_f/ρ_f`` is ONE global permutation, computed
+    once (one argsort total, vs one per link in the vmap reference)."""
     rho = jnp.maximum(state.drain_rate(dt), _EPS)
     L_r = state.lr_t1
-    cap = program.capacity[:, None]                      # [L, 1]
-    mask = (program.R.T > 0).astype(w_up.dtype)          # [L, F]
+    theta_act = L_r / rho
+    order = jnp.argsort(theta_act)
+    return {
+        "w_pos": jnp.maximum(state.uplink_demand(), 0.0),
+        "rho": rho, "L_r": L_r, "order": order,
+        "th_s": theta_act[order], "rho_s": rho[order], "L_s": L_r[order],
+    }
+
+
+def _solve_link_block(mask, cap, kind, ctx, dt: float):
+    """Fused eqs. (3)/(4) for one [B_l, F] block of links against the
+    shared flow context — the single source of the solver math for both
+    the full-axis and the chunked paths.
+
+    Per link, the prefix sums over its masked flows in global θ-order
+    equal the prefix sums over its own sorted active set, so masked
+    batched cumsums replace per-link sorts; the unique consistent active
+    prefix (and the uplink proportional closed form) drop out of one
+    [B_l, F] pass."""
+    capc = cap[:, None]                                  # [B_l, 1]
     F = mask.shape[1]
 
-    # ---- eq. (3): proportional-to-demand, all links at once -----------
-    wm = jnp.maximum(w_up, 0.0)[None, :] * mask
+    # ---- eq. (3): proportional-to-demand ------------------------------
+    wm = ctx["w_pos"][None, :] * mask
     tot = jnp.sum(wm, axis=1, keepdims=True)
     n = jnp.sum(mask, axis=1, keepdims=True)
     wm = jnp.where(tot > _EPS, wm, mask)        # zero demand: equal split
     tot = jnp.where(tot > _EPS, tot, jnp.maximum(n, 1.0))
-    x_up = cap * wm / tot
+    x_up = capc * wm / tot
 
-    # ---- eq. (4): one global sort, batched prefix scans ---------------
-    theta_act = L_r / rho                                # [F]
-    order = jnp.argsort(theta_act)
-    th_s = theta_act[order]                              # [F]
-    rho_s = rho[order]
-    L_s = L_r[order]
-    m_s = mask[:, order]                                 # [L, F]
-    cum_rho = jnp.cumsum(rho_s[None, :] * m_s, axis=1)
-    cum_L = jnp.cumsum(L_s[None, :] * m_s, axis=1)
-    theta_k = (cap * dt + cum_L) / jnp.maximum(cum_rho, _EPS)
+    # ---- eq. (4): batched prefix scans in global θ-order ---------------
+    m_s = mask[:, ctx["order"]]                          # [B_l, F]
+    cum_rho = jnp.cumsum(ctx["rho_s"][None, :] * m_s, axis=1)
+    cum_L = jnp.cumsum(ctx["L_s"][None, :] * m_s, axis=1)
+    theta_k = (capc * dt + cum_L) / jnp.maximum(cum_rho, _EPS)
     # active-set selection à la weighted simplex projection (Duchi et al.):
     # the consistent prefix is the LARGEST masked k whose candidate level
     # still covers its own activation point, θ_k ≥ θ̂_(k) — prefixes beyond
     # it would include flows that the candidate level cannot activate
     ks = jnp.arange(F)[None, :]
-    ok = (m_s > 0) & (theta_k >= th_s[None, :])
-    k_star = jnp.max(jnp.where(ok, ks, 0), axis=1)       # [L]
-    theta = jnp.take_along_axis(theta_k, k_star[:, None], axis=1)  # [L, 1]
-    x_dn = jnp.maximum(theta * rho[None, :] - L_r[None, :], 0.0) / dt * mask
+    ok = (m_s > 0) & (theta_k >= ctx["th_s"][None, :])
+    k_star = jnp.max(jnp.where(ok, ks, 0), axis=1)       # [B_l]
+    theta = jnp.take_along_axis(theta_k, k_star[:, None], axis=1)
+    x_dn = jnp.maximum(theta * ctx["rho"][None, :] - ctx["L_r"][None, :],
+                       0.0) / dt * mask
     s = jnp.sum(x_dn, axis=1, keepdims=True)
-    x_dn = jnp.where(s > _EPS, x_dn * (cap / s), x_dn)
+    x_dn = jnp.where(s > _EPS, x_dn * (capc / s), x_dn)
 
-    is_down = (program.kind == int(LinkKind.DOWNLINK))[:, None]
+    is_down = (kind == int(LinkKind.DOWNLINK))[:, None]
     return jnp.where(is_down, x_dn, x_up)
+
+
+def _per_link_rates(program: LinkProgram, state: FlowState, dt: float):
+    """Fused batched [L, F] solve of eqs. (3) and (4) for every link at
+    once: one global argsort (:func:`_flow_sort_ctx`) + one
+    :func:`_solve_link_block` pass over the full link axis."""
+    mask = (program.R.T > 0).astype(jnp.float32)         # [L, F]
+    return _solve_link_block(mask, program.capacity, program.kind,
+                             _flow_sort_ctx(state, dt), dt)
+
+
+def _per_link_rates_chunked(program: LinkProgram, state: FlowState,
+                            dt: float, block_links: int):
+    """Chunked-links variant of the fused solve: the same
+    :func:`_solve_link_block` math, but the link axis is processed in
+    ``block_links`` chunks under ``lax.map`` (sequential), so the [L, F]
+    intermediates (masked cumsums, candidate levels, prefix selections)
+    are capped at [block_links, F] — at 10⁴ links × 10³ flows that's the
+    difference between ~40 MB per intermediate and ~4 MB total working
+    set. Only the [L, F] *output* (and the input routing matrix) stay
+    full-size. The flow context (one global argsort) is shared across
+    chunks, exactly as in the fused form.
+    """
+    L, F = program.R.shape[1], program.R.shape[0]
+    ctx = _flow_sort_ctx(state, dt)
+
+    def chunk(args):
+        mask, cap, kind = args                      # [blk, F], [blk], [blk]
+        return _solve_link_block(mask, cap, kind, ctx, dt)
+
+    blk = max(int(block_links), 1)
+    n_chunks = -(-L // blk)
+    pad = n_chunks * blk - L
+    # padded links: empty mask, INTERNAL kind -> all-zero rows, dropped below
+    maskT = jnp.pad((program.R.T > 0).astype(jnp.float32), ((0, pad), (0, 0)))
+    cap_p = jnp.pad(program.capacity, (0, pad))
+    kind_p = jnp.pad(program.kind, (0, pad),
+                     constant_values=int(LinkKind.INTERNAL))
+    rows = jax.lax.map(chunk, (maskT.reshape(n_chunks, blk, F),
+                               cap_p.reshape(n_chunks, blk),
+                               kind_p.reshape(n_chunks, blk)))
+    return rows.reshape(n_chunks * blk, F)[:L]
 
 
 def _per_link_rates_pallas(program: LinkProgram, state: FlowState, dt: float):
@@ -235,22 +284,33 @@ def backfill(x: jnp.ndarray, program: LinkProgram, iters: int = 8,
     return jax.lax.fori_loop(0, iters, body, x)
 
 
-@functools.partial(jax.jit, static_argnames=("dt", "backfill_iters", "solver"))
+@functools.partial(jax.jit, static_argnames=("dt", "backfill_iters", "solver",
+                                             "block_links"))
 def allocate(
     program: LinkProgram,
     state: FlowState,
     dt: float = 1.0,
     backfill_iters: int = 8,
     solver: str = "sort",
+    block_links: int | None = None,
 ) -> jnp.ndarray:
     """Algorithm 1, one interval: FlowState -> rate vector x [F] (MB/s).
 
     solver: "sort" — exact sort-based per-link solves (CPU-friendly);
             "pallas" — the batched bisection waterfill kernel (TPU-friendly;
             interpret mode off-TPU). Both satisfy the same KKT conditions.
+    block_links: with the "sort" solver, process links in chunks of this
+            size (sequential ``lax.map``), capping the [L, F] solver
+            intermediates — exact same results, bounded working set at
+            datacenter link counts (ignored by "pallas", which tiles
+            internally).
     """
     if solver == "sort":
-        per_link = _per_link_rates(program, state, dt)         # [L, F]
+        if block_links is not None:
+            per_link = _per_link_rates_chunked(program, state, dt,
+                                               block_links)   # [L, F]
+        else:
+            per_link = _per_link_rates(program, state, dt)     # [L, F]
     elif solver == "pallas":
         per_link = _per_link_rates_pallas(program, state, dt)  # [L, F]
     else:

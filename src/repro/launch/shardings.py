@@ -3,10 +3,8 @@ and decode caches, derived from logical axes + the active policy rules."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.blocks import ParamSpec
 from repro.sharding import policy as pol
 
 # Named rule presets (hillclimb levers, EXPERIMENTS.md §Perf):

@@ -17,7 +17,6 @@ Families:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -14,8 +14,7 @@ dry-run, trainer and server are arch-agnostic:
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,6 @@ Positions are sinusoidal (no learned table ⇒ any sequence length lowers).
 """
 from __future__ import annotations
 
-import dataclasses
-import math
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,11 @@
 from repro.net.topology import (  # noqa: F401
     Link,
     LinkKind,
+    LinkSchedule,
     Topology,
     big_switch,
+    diurnal_schedule,
     fat_tree,
+    link_failure_schedule,
     tpu_pod_fabric,
 )

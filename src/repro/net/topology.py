@@ -97,6 +97,150 @@ class Topology:
         return dataclasses.replace(self, links=links)
 
 
+# --------------------------------------------------------------------------
+# time-varying link capacities
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LinkSchedule:
+    """Compact in-run capacity schedule: ``caps(t)`` per link.
+
+    The simulator evaluates, per tick,
+
+        caps_l(t) = base_l · (1 + Σ_s amp[s,l]·sin(omega[s,l]·t + phase[s,l]))
+                           · Π_{e active at t, link_e = l} scale_e
+
+    clipped at zero. Two compact array families cover the paper's in-run
+    regimes (Fig. 5/12 transients):
+
+      * **sinusoids** ``[S, L]`` — diurnal-style smooth cycles (S basis
+        components; S = 0 means none and the simulator skips the term by
+        *shape*, so static runs pay nothing);
+      * **events** ``[E]`` — piecewise-constant multiplicative steps
+        ``scale_e`` on link ``link_e`` over ``[t0_e, t1_e)``: link
+        failures (scale 0), brown-outs (0 < scale < 1), and recoveries
+        (the event simply ends). E = 0 likewise skips by shape.
+
+    Both families batch and pad like any other fleet field: padded
+    sinusoid rows have zero amplitude, padded events never activate
+    (``t0 = inf``) — a padded schedule is bitwise-neutral.
+    """
+
+    n_links: int
+    sin_amp: np.ndarray     # [S, L]
+    sin_omega: np.ndarray   # [S, L] rad/s
+    sin_phase: np.ndarray   # [S, L] rad
+    ev_t0: np.ndarray       # [E] s (event active while t0 <= t < t1)
+    ev_t1: np.ndarray       # [E] s
+    ev_link: np.ndarray     # [E] int32 link index
+    ev_scale: np.ndarray    # [E] capacity multiplier while active
+
+    @classmethod
+    def constant(cls, n_links: int) -> "LinkSchedule":
+        """A schedule that never changes anything — but *does* exercise the
+        dynamic evaluation path (one zero-amplitude sinusoid and one never-
+        active event), so it serves as the static-parity oracle."""
+        z = np.zeros((1, n_links), np.float32)
+        return cls(
+            n_links=n_links, sin_amp=z, sin_omega=z.copy(),
+            sin_phase=z.copy(),
+            ev_t0=np.full((1,), np.inf, np.float32),
+            ev_t1=np.full((1,), np.inf, np.float32),
+            ev_link=np.zeros((1,), np.int32),
+            ev_scale=np.ones((1,), np.float32),
+        )
+
+    @classmethod
+    def empty(cls, n_links: int) -> "LinkSchedule":
+        """No components at all (S = 0, E = 0): identical to passing no
+        schedule — the simulator skips every dynamic term by shape."""
+        z = np.zeros((0, n_links), np.float32)
+        e = np.zeros((0,), np.float32)
+        return cls(n_links=n_links, sin_amp=z, sin_omega=z.copy(),
+                   sin_phase=z.copy(), ev_t0=e, ev_t1=e.copy(),
+                   ev_link=e.astype(np.int32), ev_scale=e.copy())
+
+    # ---- builders (functional: each returns a new schedule) ----------
+    def with_event(self, link_ids, t0: float, t1: float = np.inf,
+                   scale: float = 0.0) -> "LinkSchedule":
+        """Scale the given links' capacity by ``scale`` over ``[t0, t1)``
+        (scale 0 = hard failure; the link recovers at ``t1``)."""
+        ids = np.atleast_1d(np.asarray(link_ids, np.int32))
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_links):
+            raise ValueError(
+                f"event link ids {ids} out of range for {self.n_links} links")
+        return dataclasses.replace(
+            self,
+            ev_t0=np.concatenate(
+                [self.ev_t0, np.full(ids.shape, t0, np.float32)]),
+            ev_t1=np.concatenate(
+                [self.ev_t1, np.full(ids.shape, t1, np.float32)]),
+            ev_link=np.concatenate([self.ev_link, ids]),
+            ev_scale=np.concatenate(
+                [self.ev_scale, np.full(ids.shape, scale, np.float32)]),
+        )
+
+    def with_diurnal(self, period_s: float, amplitude: float,
+                     link_ids=None, phase: float = 0.0) -> "LinkSchedule":
+        """Add a sinusoidal capacity cycle on ``link_ids`` (default: every
+        link): caps ·= 1 + amplitude·sin(2π t / period + phase)."""
+        amp = np.zeros((1, self.n_links), np.float32)
+        if link_ids is None:
+            amp[0, :] = amplitude
+        else:
+            amp[0, np.asarray(link_ids, np.int64)] = amplitude
+        omega = np.full((1, self.n_links), 2.0 * np.pi / period_s, np.float32)
+        ph = np.full((1, self.n_links), phase, np.float32)
+        return dataclasses.replace(
+            self,
+            sin_amp=np.concatenate([self.sin_amp, amp]),
+            sin_omega=np.concatenate([self.sin_omega, omega]),
+            sin_phase=np.concatenate([self.sin_phase, ph]),
+        )
+
+    # ---- host-side evaluation (numpy reference / plotting) -----------
+    def caps_at(self, base: np.ndarray, t) -> np.ndarray:
+        """Evaluate caps(t) in numpy. ``t`` scalar or [T]; returns [L] or
+        [T, L]. The JAX evaluation in the simulator must match this."""
+        t = np.asarray(t, np.float64)
+        scalar = t.ndim == 0
+        ts = np.atleast_1d(t)
+        caps = np.broadcast_to(np.asarray(base, np.float64)[None, :],
+                               (ts.shape[0], self.n_links)).copy()
+        if self.sin_amp.shape[0]:
+            wave = np.sum(
+                self.sin_amp[None] * np.sin(
+                    self.sin_omega[None] * ts[:, None, None]
+                    + self.sin_phase[None]), axis=1)
+            caps *= 1.0 + wave
+        for e in range(self.ev_t0.shape[0]):
+            active = (ts >= self.ev_t0[e]) & (ts < self.ev_t1[e])
+            caps[:, int(self.ev_link[e])] *= np.where(
+                active, float(self.ev_scale[e]), 1.0)
+        caps = np.maximum(caps, 0.0)
+        return caps[0] if scalar else caps
+
+
+def link_failure_schedule(topo: "Topology", link_ids, t_fail: float,
+                          t_recover: float = np.inf,
+                          degrade: float = 0.0) -> LinkSchedule:
+    """Mid-run failure (or brown-out, ``0 < degrade < 1``) of the given
+    links at ``t_fail``, recovering at ``t_recover``."""
+    return LinkSchedule.empty(topo.n_links).with_event(
+        link_ids, t_fail, t_recover, degrade)
+
+
+def diurnal_schedule(topo: "Topology", period_s: float, amplitude: float,
+                     kind: "LinkKind | None" = None,
+                     phase: float = 0.0) -> LinkSchedule:
+    """Sinusoidal capacity cycle over every link (or every link of one
+    ``kind``): the in-run version of the quasi-static diurnal sweep."""
+    ids = None
+    if kind is not None:
+        ids = np.flatnonzero(topo.link_kinds == int(kind))
+    return LinkSchedule.empty(topo.n_links).with_diurnal(
+        period_s, amplitude, link_ids=ids, phase=phase)
+
+
 def big_switch(n_machines: int, up: float, down: float | None = None) -> Topology:
     """Paper's earlier model: fabric as one big non-blocking switch; only
     machine uplinks/downlinks can bottleneck (§II-B)."""

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Sequence
 
 import numpy as np
 

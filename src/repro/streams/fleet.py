@@ -38,8 +38,16 @@ routing-matrix entries, no producers, and zero queues, so they move no
 bytes; padded links carry huge capacity and INTERNAL kind, so no solver
 ever binds on them; padded instances generate/consume nothing; padded path
 rows are all zero (the latency estimate is a pre-normalized sum, see
-``compile_sim``). A padded sim's trajectory equals the unpadded one's on
-the real entries.
+``compile_sim``); padded capacity-schedule components are exact no-ops
+(zero-amplitude sinusoids, never-active events), so fleets mixing
+scheduled and static scenarios batch together without recompiling. A
+padded sim's trajectory equals the unpadded one's on the real entries —
+with one carve-out: a static sim padded into a *scheduled* bucket takes
+the per-tick capacity-enforcement path, which only coincides with its
+standalone trajectory when the rate vector is link-feasible. The solver
+policies guarantee that; brute-force ``x_fixed`` studies deliberately
+don't, so "fixed" fleets bucket static and scheduled scenarios separately
+(``split_sched``).
 
 Exact parity with per-scenario ``simulate`` holds for every policy,
 **including "appfair"**: its priority grouping depends on the number of
@@ -87,6 +95,11 @@ class FleetShape:
     n_insts: int
     n_paths: int
     n_apps: int
+    # capacity-schedule axes: sinusoidal components / failure events.
+    # Padded sinusoids have zero amplitude, padded events never activate,
+    # so static and scheduled scenarios batch together exactly.
+    n_sins: int = 0
+    n_events: int = 0
 
     @classmethod
     def cover(cls, sims: Sequence[CompiledSim]) -> "FleetShape":
@@ -97,6 +110,8 @@ class FleetShape:
             n_insts=max(s.M_in.shape[0] for s in sims),
             n_paths=max(s.paths.shape[0] for s in sims),
             n_apps=max(s.n_apps for s in sims),
+            n_sins=max(s.sin_amp.shape[0] for s in sims),
+            n_events=max(s.ev_t0.shape[0] for s in sims),
         )
 
     def merge(self, other: "FleetShape") -> "FleetShape":
@@ -109,7 +124,8 @@ def _sim_shape(sim: CompiledSim) -> FleetShape:
     return FleetShape(
         n_flows=sim.R.shape[0], n_links=sim.R.shape[1],
         n_insts=sim.M_in.shape[0], n_paths=sim.paths.shape[0],
-        n_apps=sim.n_apps)
+        n_apps=sim.n_apps, n_sins=sim.sin_amp.shape[0],
+        n_events=sim.ev_t0.shape[0])
 
 
 def _flop_cost(shape: FleetShape) -> float:
@@ -121,15 +137,27 @@ def _flop_cost(shape: FleetShape) -> float:
     return F * L + 2.0 * shape.n_insts * F + shape.n_paths * F
 
 
+def _has_sched(shape: FleetShape) -> bool:
+    return shape.n_sins > 0 or shape.n_events > 0
+
+
 def _plan_buckets(sims: Sequence[CompiledSim], max_buckets: int,
-                  exact_apps: bool) -> list[tuple[list[int], FleetShape]]:
+                  exact_apps: bool,
+                  split_sched: bool = False) -> list[tuple[list[int],
+                                                           FleetShape]]:
     """Greedy agglomerative bucketing: start from one bucket per distinct
     true shape, repeatedly merge the pair that adds the least padded FLOPs,
     stop at ``max_buckets``. With ``exact_apps`` (the "appfair" policy)
     only buckets with equal ``n_apps`` may merge — the priority grouping is
     a function of the app count, so the app axis is never padded across
     disagreeing scenarios (the bucket count may then exceed the budget by
-    necessity: one bucket per app count at minimum)."""
+    necessity: one bucket per app count at minimum). With ``split_sched``
+    (the "fixed" policy) static and scheduled scenarios never share a
+    bucket: a static sim padded into a scheduled bucket takes the per-tick
+    capacity-enforcement path, which only matches its standalone trajectory
+    when the rate vector is link-feasible — guaranteed for the solver
+    policies but *deliberately violated* by brute-force ``x_fixed``
+    studies."""
     by_shape: dict[tuple, list[int]] = {}
     for i, s in enumerate(sims):
         by_shape.setdefault(dataclasses.astuple(_sim_shape(s)), []).append(i)
@@ -147,6 +175,9 @@ def _plan_buckets(sims: Sequence[CompiledSim], max_buckets: int,
             for k in range(j + 1, len(buckets)):
                 if exact_apps and (buckets[j][1].n_apps
                                    != buckets[k][1].n_apps):
+                    continue
+                if split_sched and (_has_sched(buckets[j][1])
+                                    != _has_sched(buckets[k][1])):
                     continue
                 w = merge_waste(buckets[j], buckets[k])
                 if best is None or w < best[0]:
@@ -187,6 +218,7 @@ def pad_sim(sim: CompiledSim, shape: FleetShape,
     """
     F, L = shape.n_flows, shape.n_links
     I, P, A = shape.n_insts, shape.n_paths, shape.n_apps
+    S, E = shape.n_sins, shape.n_events
     if sim.n_apps > A:
         raise ValueError(f"cannot pad n_apps {sim.n_apps} down to {A}")
     f = False
@@ -206,12 +238,21 @@ def pad_sim(sim: CompiledSim, shape: FleetShape,
         join_dst=_pad1(sim.join_dst, F, f),
         droppable=_pad1(sim.droppable, F, f),
         dst_of_flow=_pad1(sim.dst_of_flow, F, 0),
+        src_of_flow=_pad1(sim.src_of_flow, F, 0),
+        w_of_flow=_pad1(sim.w_of_flow, F),
         paths=_pad2(sim.paths, P, F),
         tuples_per_mb=(sim.tuples_per_mb if tuples_per_mb is None
                        else float(tuples_per_mb)),
         app_of_flow=_pad1(sim.app_of_flow, F, 0),
         app_of_inst=_pad1(sim.app_of_inst, I, 0),
         n_apps=A,
+        sin_amp=_pad2(sim.sin_amp, S, L),
+        sin_omega=_pad2(sim.sin_omega, S, L),
+        sin_phase=_pad2(sim.sin_phase, S, L),
+        ev_t0=_pad1(sim.ev_t0, E, np.inf),
+        ev_t1=_pad1(sim.ev_t1, E, np.inf),
+        ev_link=_pad1(sim.ev_link, E, 0),
+        ev_scale=_pad1(sim.ev_scale, E, 1.0),
     )
 
 
@@ -246,9 +287,18 @@ _FIELD_SPECS: dict[str, tuple[tuple[str, ...], float]] = {
     "join_dst": (("F",), False),
     "droppable": (("F",), False),
     "dst_of_flow": (("F",), 0),
+    "src_of_flow": (("F",), 0),
+    "w_of_flow": (("F",), 0.0),
     "paths": (("P", "F"), 0.0),
     "app_of_flow": (("F",), 0),
     "app_of_inst": (("I",), 0),
+    "sin_amp": (("S", "L"), 0.0),
+    "sin_omega": (("S", "L"), 0.0),
+    "sin_phase": (("S", "L"), 0.0),
+    "ev_t0": (("E",), np.inf),
+    "ev_t1": (("E",), np.inf),
+    "ev_link": (("E",), 0),
+    "ev_scale": (("E",), 1.0),
 }
 
 
@@ -329,28 +379,33 @@ class FleetRunner:
         self._plan_cache: dict[tuple, list[tuple[list[int], FleetShape]]] = {}
 
     # ---------------------------------------------------------- planning
-    def plan(self, sims: Sequence[CompiledSim],
-             exact_apps: bool = False) -> list[tuple[list[int], FleetShape]]:
+    def plan(self, sims: Sequence[CompiledSim], exact_apps: bool = False,
+             split_sched: bool = False) -> list[tuple[list[int], FleetShape]]:
         """Bucket assignment for a fleet: list of (scenario indices, padded
         bucket shape). Cached per shape multiset."""
         key = (tuple(dataclasses.astuple(_sim_shape(s)) for s in sims),
-               exact_apps, self.max_buckets)
+               exact_apps, split_sched, self.max_buckets)
         plan = self._plan_cache.get(key)
         if plan is None:
-            plan = _plan_buckets(sims, self.max_buckets, exact_apps)
+            plan = _plan_buckets(sims, self.max_buckets, exact_apps,
+                                 split_sched)
             self._plan_cache[key] = plan
         return plan
 
     # ----------------------------------------------------------- staging
-    def _stack_bucket(self, sims: list[CompiledSim],
-                      shape: FleetShape) -> CompiledSim:
+    def _stack_bucket(self, sims: list[CompiledSim], shape: FleetShape,
+                      idxs: list[int]) -> CompiledSim:
         """Stack a bucket into preallocated numpy staging buffers (reset +
         slice-assign; no per-sim np.pad allocations on repeat calls). When
         the bucket holds the *same scenario objects* as the previous call
         (the steady state of a repeat study) the filled buffers are reused
-        outright — the warm path re-stacks nothing."""
+        outright — the warm path re-stacks nothing. The key includes the
+        bucket's member indices: two buckets of one fleet can share a
+        padded shape and batch size, and a shape-only key would make them
+        overwrite each other's staging every call (silently losing the
+        warm-path reuse for both)."""
         B = len(sims)
-        key = (dataclasses.astuple(shape), B)
+        key = (dataclasses.astuple(shape), tuple(idxs))
         refs = self._filled.get(key)
         if refs is not None and len(refs) == B and all(
                 r() is s for r, s in zip(refs, sims)):
@@ -373,7 +428,8 @@ class FleetRunner:
                 self._filled.pop(k, None)
         bufs = self._staging.setdefault(key, {})
         dims = {"F": shape.n_flows, "L": shape.n_links,
-                "I": shape.n_insts, "P": shape.n_paths}
+                "I": shape.n_insts, "P": shape.n_paths,
+                "S": shape.n_sins, "E": shape.n_events}
         leaves = {}
         for field, (axes, pad) in _FIELD_SPECS.items():
             first = np.asarray(getattr(sims[0], field))
@@ -431,12 +487,15 @@ class FleetRunner:
         # phase 1: stage + dispatch every bucket (jax dispatch is async, so
         # bucket k+1's host staging/transfer overlaps bucket k's compute)
         pending = []
-        for idxs, shape in self.plan(sims, exact_apps=(policy == "appfair")):
+        for idxs, shape in self.plan(sims,
+                                     exact_apps=(policy == "appfair"),
+                                     split_sched=(policy == "fixed")):
             pad_b = (-len(idxs)) % n_dev if n_dev > 1 else 0
             run_idxs = idxs + [idxs[-1]] * pad_b
             n_shards = n_dev if (n_dev > 1 and len(run_idxs) % n_dev == 0
                                  ) else 1
-            stacked = self._stack_bucket([sims[i] for i in run_idxs], shape)
+            stacked = self._stack_bucket([sims[i] for i in run_idxs], shape,
+                                         run_idxs)
             xf = None
             if x_fixed is not None:
                 xf = np.stack([
@@ -454,9 +513,10 @@ class FleetRunner:
 
         # phase 2: collect (first np.asarray per bucket blocks on its result)
         out: list[SimResult | None] = [None] * len(sims)
-        for idxs, (sink, sink_app, lat, load) in pending:
+        for idxs, (sink, sink_app, lat, load, caps_sched) in pending:
             sink, sink_app = np.asarray(sink), np.asarray(sink_app)
             lat, load = np.asarray(lat), np.asarray(load)
+            caps_sched = np.asarray(caps_sched)
             for b, i in enumerate(idxs):
                 sim = sims[i]
                 L, A = sim.caps.shape[0], sim.n_apps
@@ -469,6 +529,7 @@ class FleetRunner:
                     kinds=np.asarray(sim.kinds),
                     tuples_per_mb=sim.tuples_per_mb,
                     dt=dt,
+                    caps_t=caps_sched[b][:, :L] if sim.is_dynamic else None,
                 )
         return out  # type: ignore[return-value]
 

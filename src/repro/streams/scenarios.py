@@ -11,15 +11,21 @@ open:
   * ``random_app``            — randomized layered DAGs (fan-out, joins,
                                 key skew) for property-style robustness;
   * ``link_failure_sweep``    — seed workloads with a random subset of
-                                links degraded to a fraction of capacity
-                                (SDN reroute-around-failure regime);
-  * ``time_varying_sweep``    — one scenario per phase of a sinusoidal
-                                (diurnal-style) capacity cycle: the batch
-                                axis explores time, each phase is a
-                                quasi-static allocation problem (the
-                                controller re-solves every Δt anyway);
+                                links degraded to a fraction of capacity.
+                                With ``in_run=True`` the failure happens
+                                *mid-run* (and recovers) via a
+                                :class:`~repro.net.topology.LinkSchedule`,
+                                exercising the controller's transient
+                                response; the static form stays as the
+                                steady-state parity oracle;
+  * ``time_varying_sweep``    — a sinusoidal (diurnal-style) capacity
+                                cycle. Static form: one scenario per phase
+                                (the batch axis explores time, each phase
+                                quasi-static). ``in_run=True``: the cycle
+                                runs *inside* each scenario as a schedule;
   * ``seed_fleet``            — a mixed ≥16-scenario fleet of all of the
-                                above, the default benchmark/test corpus.
+                                above (including in-run schedules), the
+                                default benchmark/test corpus.
 """
 from __future__ import annotations
 
@@ -27,7 +33,16 @@ import dataclasses
 
 import numpy as np
 
-from repro.net.topology import LinkKind, Link, Topology, big_switch, fat_tree
+from repro.net.topology import (
+    Link,
+    LinkKind,
+    LinkSchedule,
+    Topology,
+    big_switch,
+    diurnal_schedule,
+    fat_tree,
+    link_failure_schedule,
+)
 from repro.streams.app import Edge, Grouping, InstanceGraph, Operator, StreamApp, parallelize
 from repro.streams.placement import round_robin
 from repro.streams.simulator import CompiledSim, compile_sim
@@ -46,9 +61,11 @@ class Scenario:
     graph: InstanceGraph
     topo: Topology
     placement: np.ndarray
+    schedule: LinkSchedule | None = None   # in-run capacity dynamics
 
     def compile(self) -> CompiledSim:
-        return compile_sim(self.graph, self.topo, self.placement)
+        return compile_sim(self.graph, self.topo, self.placement,
+                           schedule=self.schedule)
 
 
 def compile_fleet(scenarios: list[Scenario]) -> list[CompiledSim]:
@@ -137,11 +154,18 @@ def capacity_sweep(caps: dict[str, float] = PAPER_CAPS_MBPS,
 
 
 def link_failure_sweep(n: int = 6, seed: int = 0, fail_frac: float = 0.25,
-                       degrade: float = 0.1, cap: float = 1.875
-                       ) -> list[Scenario]:
+                       degrade: float = 0.1, cap: float = 1.875,
+                       in_run: bool = False, t_fail: float = 60.0,
+                       t_recover: float = 90.0) -> list[Scenario]:
     """Seed workloads on a fat-tree with a random ``fail_frac`` of links
     degraded to ``degrade``× capacity — does the allocator route value
-    (not just bytes) around brown-outs?"""
+    (not just bytes) around brown-outs?
+
+    ``in_run=False``: the degradation holds for the whole run (the original
+    steady-state form — kept as the parity oracle for the scheduled path).
+    ``in_run=True``: links fail at ``t_fail`` and recover at ``t_recover``
+    *inside* the run, so the result traces the controller's transient
+    (dip depth / recovery time, the paper's Fig. 5/12 regime)."""
     rng = np.random.default_rng(seed)
     out = []
     for k in range(n):
@@ -150,35 +174,61 @@ def link_failure_sweep(n: int = 6, seed: int = 0, fail_frac: float = 0.25,
         topo = fat_tree(up=12.5).set_capacity(LinkKind.INTERNAL, cap)
         n_fail = max(1, int(fail_frac * topo.n_links))
         failed = rng.choice(topo.n_links, size=n_fail, replace=False)
-        out.append(Scenario(
-            f"{app_name}_fail{k}", g, degrade_links(topo, failed, degrade),
-            round_robin(g, topo.n_machines)))
+        if in_run:
+            sched = link_failure_schedule(topo, failed, t_fail, t_recover,
+                                          degrade)
+            out.append(Scenario(
+                f"{app_name}_failrun{k}", g, topo,
+                round_robin(g, topo.n_machines), schedule=sched))
+        else:
+            out.append(Scenario(
+                f"{app_name}_fail{k}", g, degrade_links(topo, failed, degrade),
+                round_robin(g, topo.n_machines)))
     return out
 
 
 def time_varying_sweep(n_phases: int = 8, base_cap: float = 1.875,
                        amplitude: float = 0.4, app: str = "TT",
-                       seed: int = 0) -> list[Scenario]:
-    """A diurnal-style capacity cycle sampled at ``n_phases`` points: link
-    capacity = base·(1 + amplitude·sin(2π·phase/n_phases)). Each phase is
-    one scenario; the batch axis *is* the time axis (each phase is long
-    against the 5 s controller interval, so quasi-static)."""
+                       seed: int = 0, in_run: bool = False,
+                       period_s: float = 120.0) -> list[Scenario]:
+    """A diurnal-style capacity cycle.
+
+    ``in_run=False``: sampled at ``n_phases`` points — link capacity =
+    base·(1 + amplitude·sin(2π·phase/n_phases)), one scenario per phase;
+    the batch axis *is* the time axis (each phase is long against the 5 s
+    controller interval, so quasi-static). Kept as the steady-state oracle.
+    ``in_run=True``: the cycle runs *inside* each scenario (period
+    ``period_s``, one scenario per starting phase), so the controller
+    tracks a genuinely moving capacity."""
     g = parallelize(_SEED_APPS[app](), seed=seed)
     out = []
     for p in range(n_phases):
-        cap = base_cap * (1.0 + amplitude * np.sin(2 * np.pi * p / n_phases))
-        topo = big_switch(8, float(cap))
-        out.append(Scenario(f"{app}_phase{p}", g, topo, round_robin(g, 8)))
+        if in_run:
+            topo = big_switch(8, base_cap)
+            sched = diurnal_schedule(topo, period_s, amplitude,
+                                     phase=2 * np.pi * p / n_phases)
+            out.append(Scenario(f"{app}_cyclerun{p}", g, topo,
+                                round_robin(g, 8), schedule=sched))
+        else:
+            cap = base_cap * (1.0 + amplitude
+                              * np.sin(2 * np.pi * p / n_phases))
+            topo = big_switch(8, float(cap))
+            out.append(Scenario(f"{app}_phase{p}", g, topo,
+                                round_robin(g, 8)))
     return out
 
 
 def seed_fleet(seed: int = 0) -> list[Scenario]:
     """The default ≥16-scenario corpus: paper grid (single- and multi-hop),
-    link failures, a capacity cycle, and random DAGs."""
+    link failures (steady-state *and* in-run), capacity cycles (sampled
+    *and* in-run), and random DAGs."""
     return (
-        capacity_sweep(multihop=False, seed=seed)        # 6
-        + capacity_sweep(multihop=True, seed=seed)       # 6
-        + link_failure_sweep(n=4, seed=seed)             # 4
-        + time_varying_sweep(n_phases=4, seed=seed)      # 4
-        + random_scenarios(4, seed=seed)                 # 4
+        capacity_sweep(multihop=False, seed=seed)            # 6
+        + capacity_sweep(multihop=True, seed=seed)           # 6
+        + link_failure_sweep(n=4, seed=seed)                 # 4
+        + time_varying_sweep(n_phases=4, seed=seed)          # 4
+        + random_scenarios(4, seed=seed)                     # 4
+        + link_failure_sweep(n=2, seed=seed, in_run=True)    # 2
+        + time_varying_sweep(n_phases=2, seed=seed,
+                             in_run=True)                    # 2
     )

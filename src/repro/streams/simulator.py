@@ -16,6 +16,19 @@ Each tick (``dt`` seconds):
 The whole run is one `jax.lax.scan`, jitted; policies recompute rates inside
 the scan (TCP every tick — idealized instant congestion control; App-aware
 every Δt, matching the paper's 5 s controller interval).
+
+**In-run network dynamics:** link capacity is a function of time. A
+:class:`repro.net.topology.LinkSchedule` (sinusoidal diurnal components +
+piecewise-constant failure/recovery events) compiles into per-sim arrays;
+``_caps_over`` evaluates the whole ``[T, L]`` capacity trajectory once per
+run and the scan consumes it as an ``xs`` stream, so the per-tick cost of a
+schedule is one dynamic slice. Policies re-solve against ``caps(t_upd)`` at
+their update ticks; between updates the *network itself* enforces the
+current capacity (a failed link moves no bytes even while the controller's
+rates are stale — that stale window is exactly the transient the paper's
+Fig. 5/12 regime is about). A sim compiled without a schedule (S = 0
+sinusoids, E = 0 events) skips every dynamic term *by shape* and runs the
+static path unchanged.
 """
 from __future__ import annotations
 
@@ -36,7 +49,7 @@ from repro.core.multiapp import (
     strict_priority_alloc,
 )
 from repro.core.tcp import demand_limited_maxmin
-from repro.net.topology import Topology
+from repro.net.topology import LinkSchedule, Topology
 from repro.streams.app import InstanceGraph, source_sink_paths
 
 _EPS = 1e-9
@@ -50,8 +63,10 @@ _LAT_CAP = 1e4       # s: cap on per-flow latency contribution (stalled flows)
     data_fields=(
         "R", "caps", "kinds", "has_links", "M_in", "w_out", "p_in",
         "proc_rate", "selectivity", "gen_rate", "is_join", "is_sink",
-        "join_dst", "droppable", "dst_of_flow", "paths", "app_of_flow",
-        "app_of_inst",
+        "join_dst", "droppable", "dst_of_flow", "src_of_flow", "w_of_flow",
+        "paths", "app_of_flow", "app_of_inst",
+        "sin_amp", "sin_omega", "sin_phase",
+        "ev_t0", "ev_t1", "ev_link", "ev_scale",
     ),
 )
 @dataclasses.dataclass
@@ -60,7 +75,7 @@ class CompiledSim:
 
     # network
     R: Any               # [F, L]
-    caps: Any            # [L]
+    caps: Any            # [L] base capacities (schedule scales them in-run)
     kinds: Any           # [L]
     has_links: Any       # [F] bool
     # dataflow
@@ -75,16 +90,39 @@ class CompiledSim:
     join_dst: Any        # [F] bool: flow terminates at a join instance
     droppable: Any       # [F] bool: stale excess is discarded at the join
     dst_of_flow: Any     # [F]
+    src_of_flow: Any     # [F]
+    w_of_flow: Any       # [F] = w_out[src_of_flow[f], f] (the column's only
+                         #      nonzero: each flow has one source instance)
     paths: Any           # [P, F], rows pre-scaled by 1/P (Σ of path waits
                          #         = mean latency; zero rows are neutral)
     tuples_per_mb: float
     app_of_flow: Any     # [F] int
     app_of_inst: Any     # [I] int
     n_apps: int
+    # capacity schedule (see repro.net.topology.LinkSchedule); S = 0 / E = 0
+    # means static caps and the simulator skips the dynamic terms by shape
+    sin_amp: Any         # [S, L]
+    sin_omega: Any       # [S, L]
+    sin_phase: Any       # [S, L]
+    ev_t0: Any           # [E]
+    ev_t1: Any           # [E]
+    ev_link: Any         # [E] int32
+    ev_scale: Any        # [E]
 
     @property
     def program(self) -> LinkProgram:
         return LinkProgram(R=self.R, capacity=self.caps, kind=self.kinds)
+
+    def program_at(self, caps_t) -> LinkProgram:
+        return LinkProgram(R=self.R, capacity=caps_t, kind=self.kinds)
+
+    @property
+    def is_dynamic(self) -> bool:
+        """Whether a capacity schedule is attached — a *shape* predicate
+        (S > 0 sinusoids or E > 0 events), so it is trace-time static and
+        every consumer (scan stream, enforcement, caps_t reporting) gates
+        on the same definition."""
+        return self.sin_amp.shape[0] > 0 or self.ev_t0.shape[0] > 0
 
 
 def compile_sim(
@@ -93,6 +131,7 @@ def compile_sim(
     machine_of_inst: np.ndarray,
     app_of_inst: np.ndarray | None = None,
     n_apps: int = 1,
+    schedule: LinkSchedule | None = None,
 ) -> CompiledSim:
     flows = graph.flow_pairs(machine_of_inst)
     R = topo.routing_matrix(flows)
@@ -134,6 +173,20 @@ def compile_sim(
     app_of_inst = (
         np.zeros(graph.n_instances, np.int32) if app_of_inst is None else app_of_inst
     )
+    if schedule is None:
+        schedule = LinkSchedule.empty(topo.n_links)
+    elif schedule.n_links != topo.n_links:
+        raise ValueError(
+            f"schedule covers {schedule.n_links} links, topology has "
+            f"{topo.n_links}")
+    ev_link = np.asarray(schedule.ev_link)
+    if ev_link.size and (ev_link.min() < 0
+                         or ev_link.max() >= topo.n_links):
+        # a stale schedule (built for another topology) would otherwise be
+        # silently clipped onto the wrong link by the jitted evaluation
+        raise ValueError(
+            f"schedule event links {ev_link} out of range for "
+            f"{topo.n_links} links")
     f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
     return CompiledSim(
         R=f32(R),
@@ -151,21 +204,91 @@ def compile_sim(
         join_dst=jnp.asarray(graph.is_join[graph.dst_of_flow]),
         droppable=jnp.asarray(droppable),
         dst_of_flow=jnp.asarray(graph.dst_of_flow),
+        src_of_flow=jnp.asarray(graph.src_of_flow),
+        w_of_flow=f32(graph.w_out[graph.src_of_flow,
+                                  np.arange(graph.n_flows)]),
         paths=f32(paths),
         tuples_per_mb=float(graph.app.tuples_per_mb),
         app_of_flow=jnp.asarray(app_of_inst[graph.dst_of_flow], jnp.int32),
         app_of_inst=jnp.asarray(app_of_inst, jnp.int32),
         n_apps=int(n_apps),
+        sin_amp=f32(schedule.sin_amp),
+        sin_omega=f32(schedule.sin_omega),
+        sin_phase=f32(schedule.sin_phase),
+        ev_t0=f32(schedule.ev_t0),
+        ev_t1=f32(schedule.ev_t1),
+        ev_link=jnp.asarray(schedule.ev_link, jnp.int32),
+        ev_scale=f32(schedule.ev_scale),
     )
+
+
+def _caps_over(sim: CompiledSim, ts: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate the capacity schedule on a tick grid: [T, L].
+
+    Computed once per run *outside* the scan and streamed in as ``xs`` — a
+    schedule costs one dynamic slice per tick, not per-tick trig/scatter.
+    Sims without sinusoids (S = 0) or events (E = 0) skip those terms by
+    shape; a zero-amplitude / never-active schedule multiplies by exactly
+    1.0, so the constant-schedule path is bitwise-identical to static caps.
+    """
+    L = sim.caps.shape[0]
+    caps = jnp.broadcast_to(sim.caps[None, :], (ts.shape[0], L))
+    if sim.sin_amp.shape[0]:
+        wave = jnp.sum(
+            sim.sin_amp[None] * jnp.sin(
+                sim.sin_omega[None] * ts[:, None, None]
+                + sim.sin_phase[None]), axis=1)           # [T, L]
+        caps = caps * (1.0 + wave)
+    if sim.ev_t0.shape[0]:
+        active = (ts[:, None] >= sim.ev_t0[None]) & (
+            ts[:, None] < sim.ev_t1[None])                # [T, E]
+        mult = jnp.where(active, sim.ev_scale[None], 1.0)
+        idx = jnp.clip(sim.ev_link, 0, L - 1)
+        ones = jnp.ones((L,), caps.dtype)
+        scale = jax.vmap(lambda m: ones.at[idx].multiply(m))(mult)
+        caps = caps * scale
+    return jnp.maximum(caps, 0.0)
 
 
 # --------------------------------------------------------------------------
 # one simulation tick (shared by all policies)
 # --------------------------------------------------------------------------
-def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap):
+def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap, caps_t=None):
+    """One fluid step against the *current* link capacities ``caps_t``.
+
+    Fused dispatch chain: ``M_in`` and ``w_out`` have exactly one nonzero
+    per flow column (the flow's destination / source instance), so the
+    back half of the original chain collapses algebraically —
+    ``M_in @ (consume·stall[dst]) = (M_in @ consume)·stall`` and
+    ``w_out.T @ v = v[src]·w_of_flow`` — replacing two of the per-tick
+    [I, F] matmuls with O(F) gathers. The remaining contractions stay as
+    matmuls / masked reductions on purpose: under the fleet engine's vmap
+    they lower to batched GEMMs and reduces, where segment/scatter forms
+    would serialize on CPU backends.
+    """
+    dst, src = sim.dst_of_flow, sim.src_of_flow
+
     # receiver-window flow control: never overflow the receive buffer
-    transfer = jnp.minimum(jnp.minimum(Qs, x * dt),
-                           jnp.maximum(qcap - Qr, 0.0))
+    desired = jnp.minimum(jnp.minimum(Qs, x * dt),
+                          jnp.maximum(qcap - Qr, 0.0))
+    if caps_t is None:
+        # static capacities: the policies' rate vectors are already
+        # link-feasible, so the transfer needs no per-tick capacity check
+        # (the pre-dynamics semantics — and cost — exactly)
+        transfer = desired
+    else:
+        # the network enforces the *current* capacity: between controller
+        # updates a failed/shrunk link moves at most caps_t·dt, whatever
+        # the stale rate vector says. Feasible loads scale by exactly 1.0,
+        # so a constant schedule reproduces the static path.
+        load0 = desired @ sim.R                                  # [L] MB
+        lscale = jnp.where(load0 > caps_t * dt,
+                           jnp.clip(caps_t * dt / jnp.maximum(load0, _EPS),
+                                    0.0, 1.0),
+                           1.0)
+        fscale = jnp.min(jnp.where(sim.R > 0, lscale[None, :], jnp.inf),
+                         axis=1)
+        transfer = desired * jnp.where(jnp.isfinite(fscale), fscale, 1.0)
     Qs = Qs - transfer
     Qr = Qr + transfer
 
@@ -175,12 +298,12 @@ def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap):
     join_amt = jnp.min(masked, axis=1)                           # [I]
     join_amt = jnp.where(jnp.isfinite(join_amt), join_amt, 0.0)
     join_amt = jnp.minimum(join_amt, sim.proc_rate * dt)
-    consume_join = join_amt[sim.dst_of_flow] * sim.p_in          # [F]
+    consume_join = join_amt[dst] * sim.p_in                      # [F]
 
     total_in = sim.M_in @ Qr                                     # [I]
     amt = jnp.minimum(total_in, sim.proc_rate * dt)
     frac = amt / jnp.maximum(total_in, _EPS)
-    consume_any = Qr * frac[sim.dst_of_flow]
+    consume_any = Qr * frac[dst]
 
     consume = jnp.where(sim.join_dst, consume_join, consume_any)
     consume = jnp.minimum(consume, Qr)
@@ -189,7 +312,7 @@ def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap):
     # whose outgoing queue is full stalls its processing / generation
     in_i = sim.M_in @ consume                                    # [I]
     out_i = sim.selectivity * in_i + sim.gen_rate * dt
-    prod = sim.w_out.T @ out_i                                   # [F]
+    prod = out_i[src] * sim.w_of_flow                            # [F]
     space = jnp.maximum(qcap - Qs, 0.0)
     scale_f = jnp.clip(space / jnp.maximum(prod, _EPS), 0.0, 1.0)
     # droppable (latest-value) streams never backpressure upstream: the app
@@ -199,21 +322,28 @@ def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap):
     stall_i = jnp.min(stalled, axis=1)                           # [I]
     stall_i = jnp.where(jnp.isfinite(stall_i), stall_i, 1.0)
 
-    consume = consume * stall_i[sim.dst_of_flow]
+    consume = consume * stall_i[dst]
     Qr = Qr - consume
     # stale-data discard: droppable join inputs keep only a small working
     # window; bytes beyond it were carried by the network for nothing.
     Qr = jnp.where(sim.droppable, jnp.minimum(Qr, 0.5), Qr)
-    in_i = sim.M_in @ consume
+    in_i = in_i * stall_i        # = M_in @ (consume·stall[dst]), fused
     out_i = sim.selectivity * in_i + sim.gen_rate * dt * stall_i
-    Qs = Qs + sim.w_out.T @ out_i
+    Qs = Qs + out_i[src] * sim.w_of_flow   # = w_out.T @ out_i, fused
     # latest-value send queues hold only the freshest working window
     Qs = jnp.where(sim.droppable, jnp.minimum(Qs, 0.5), Qs)
 
-    sink_mb = jnp.sum(jnp.where(sim.is_sink, in_i, 0.0))
-    sink_mb_app = jax.ops.segment_sum(
-        jnp.where(sim.is_sink, in_i, 0.0), sim.app_of_inst, num_segments=sim.n_apps
-    )
+    sink_in = jnp.where(sim.is_sink, in_i, 0.0)
+    sink_mb = jnp.sum(sink_in)
+    if sim.n_apps == 1:
+        # single-app sims (the common case): the per-app split IS the total
+        sink_mb_app = sink_mb[None]
+    else:
+        # small one-hot contraction instead of a segment_sum: under the
+        # fleet vmap this is a batched GEMM where a scatter would serialize
+        onehot = (sim.app_of_inst[None, :]
+                  == jnp.arange(sim.n_apps)[:, None]).astype(sink_in.dtype)
+        sink_mb_app = onehot @ sink_in
     drain = consume / dt                                         # [F] MB/s
 
     # --- latency estimate (per source→sink path) ----------------------
@@ -230,20 +360,21 @@ def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap):
 # --------------------------------------------------------------------------
 # policies
 # --------------------------------------------------------------------------
-def _tcp_rates(sim: CompiledSim, Qs, Qr, prod_rate, drain_ewma, dt, qcap):
+def _tcp_rates(sim: CompiledSim, caps_t, Qs, Qr, prod_rate, drain_ewma,
+               dt, qcap):
     # sender-side demand, clamped by the receiver window (rwnd): a flow whose
     # receive buffer is full only demands its drain rate — real TCP frees the
     # bottleneck for other flows exactly this way.
     send = Qs / dt + prod_rate
     rwnd = jnp.maximum(qcap - Qr, 0.0) / dt + drain_ewma
     demand = jnp.minimum(send, rwnd)
-    x = demand_limited_maxmin(sim.R, sim.caps, demand)
+    x = demand_limited_maxmin(sim.R, caps_t, demand)
     return jnp.where(sim.has_links, jnp.minimum(x, demand), INTERNAL_RATE)
 
 
-def _appaware_rates(sim: CompiledSim, state: FlowState, dt_alloc,
+def _appaware_rates(sim: CompiledSim, caps_t, state: FlowState, dt_alloc,
                     backfill_iters=8, solver: str = "sort"):
-    x = allocate(sim.program, state, dt=dt_alloc,
+    x = allocate(sim.program_at(caps_t), state, dt=dt_alloc,
                  backfill_iters=backfill_iters, solver=solver)
     return jnp.where(sim.has_links, x, INTERNAL_RATE)
 
@@ -254,13 +385,22 @@ class SimResult:
     sink_mb_app: np.ndarray    # [T, A]
     latency: np.ndarray        # [T]
     link_load: np.ndarray      # [T, L]
-    caps: np.ndarray           # [L]
+    caps: np.ndarray           # [L] base capacities
     kinds: np.ndarray          # [L]
     tuples_per_mb: float
     dt: float
+    caps_t: np.ndarray | None = None   # [T, L] per-tick capacities
 
     def _warm(self, arr):
         return arr[arr.shape[0] // 4:]
+
+    @property
+    def caps_grid(self) -> np.ndarray:
+        """Per-tick capacities [T, L] (static caps broadcast if no
+        schedule ran)."""
+        if self.caps_t is not None:
+            return self.caps_t
+        return np.broadcast_to(self.caps[None, :], self.link_load.shape)
 
     @property
     def throughput_tps(self) -> float:
@@ -280,13 +420,69 @@ class SimResult:
     def bottleneck_utilization(self, threshold: float = 0.5) -> float:
         """Avg utilization over bottlenecked links — links carrying ≥
         ``threshold`` of their capacity (paper Fig. 12 'average link
-        throughput over all bottlenecked links')."""
-        load = self._warm(self.link_load).mean(0)
-        util = load / np.maximum(self.caps, _EPS)
+        throughput over all bottlenecked links'). Utilization is per-tick
+        against the *scheduled* capacity, so a failed link at 10% capacity
+        carrying 10% load counts as fully utilized, not idle."""
+        load = self._warm(self.link_load)
+        caps = self._warm(self.caps_grid)
+        util_t = load / np.maximum(caps, _EPS)            # [T', L]
+        util = util_t.mean(0)
         hot = util >= threshold
         if not hot.any():
             hot = util >= util.max() * 0.999
         return float(util[hot].mean())
+
+    # ---- transient response (in-run schedules) -----------------------
+    def _smooth_tput(self, win_s: float = 5.0) -> np.ndarray:
+        """Sink throughput [T] (tuples/s) smoothed over ``win_s`` so the
+        per-tick granularity doesn't alias the transient metrics. Edge
+        windows divide by the actual sample count (a plain ``mode="same"``
+        convolution would average in implicit zeros and fake a dip at the
+        trace boundaries)."""
+        w = max(int(round(win_s / self.dt)), 1)
+        rate = self.sink_mb / self.dt * self.tuples_per_mb
+        kern = np.ones(w)
+        num = np.convolve(rate, kern, mode="same")
+        den = np.convolve(np.ones_like(rate), kern, mode="same")
+        return num / den
+
+    def dip_depth(self, t_event: float, pre_s: float = 20.0,
+                  win_s: float = 5.0) -> float:
+        """Fractional throughput dip after an event at ``t_event``: how far
+        the post-event minimum falls below the pre-event mean (0 = no dip,
+        1 = complete stall)."""
+        r = self._smooth_tput(win_s)
+        i = min(int(round(t_event / self.dt)), r.shape[0] - 1)
+        pre = r[max(0, i - int(round(pre_s / self.dt))):max(i, 1)]
+        pre_mean = float(pre.mean()) if pre.size else 0.0
+        if pre_mean <= _EPS:
+            return 0.0
+        post_min = float(r[i:].min()) if r[i:].size else pre_mean
+        return max(0.0, (pre_mean - post_min) / pre_mean)
+
+    def recovery_time_s(self, t_event: float, frac: float = 0.95,
+                        win_s: float = 5.0) -> float:
+        """Settling time after an event at ``t_event``: how long the
+        smoothed throughput takes to first re-enter the ±(1−``frac``) band
+        around its post-event steady state (mean over the last quarter of
+        the post-event window) *after having left it* — covering both a
+        dip-and-recover transient and a monotone decay onto a degraded
+        plateau. 0 if it never leaves the band (no transient); ``inf`` if
+        it leaves and never settles."""
+        r = self._smooth_tput(win_s)
+        i = min(int(round(t_event / self.dt)), r.shape[0] - 1)
+        post = r[i:]
+        if post.size < 2:
+            return 0.0
+        steady = float(post[-max(post.size // 4, 1):].mean())
+        inside = (post >= frac * steady) & (post * frac <= steady)
+        if inside.all():
+            return 0.0
+        first_out = int(np.argmax(~inside))
+        ok = inside[first_out:]
+        if not ok.any():
+            return float("inf")
+        return float(first_out + int(np.argmax(ok))) * self.dt
 
 
 @functools.partial(
@@ -299,10 +495,22 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
          qcap: float = 8.0, solver: str = "sort"):
     F = sim.R.shape[0]
     z = jnp.zeros((F,), jnp.float32)
+    # shape-static gate: sims compiled without a schedule (S = 0, E = 0)
+    # skip the capacity stream, the per-tick enforcement, and the [T, L]
+    # trajectory output entirely — the static path costs what it did
+    # before in-run dynamics existed
+    dynamic = sim.is_dynamic
+    if dynamic:
+        ts = jnp.arange(n_ticks, dtype=jnp.float32) * dt
+        caps_sched = _caps_over(sim, ts)              # [T, L]
+    else:
+        caps_sched = jnp.zeros((0, sim.caps.shape[0]), jnp.float32)
 
-    def policy_rates(Qs, Qr, B, prod_rate, drain_ewma, v_acc, ls, lr, mu):
+    def policy_rates(caps_t, Qs, Qr, B, prod_rate, drain_ewma, v_acc,
+                     ls, lr, mu):
         if policy == "tcp":
-            return _tcp_rates(sim, Qs, Qr, prod_rate, drain_ewma, dt, qcap)
+            return _tcp_rates(sim, caps_t, Qs, Qr, prod_rate, drain_ewma,
+                              dt, qcap)
         if policy == "fixed":
             return jnp.where(sim.has_links, x_fixed, INTERNAL_RATE)
         if policy == "appaware":
@@ -310,47 +518,67 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
             # B (bytes transferred but not yet joined — stale drops still
             # count as backlog: the paper's memory-overrun signal, Fig. 5)
             st = FlowState(ls_t=ls, lr_t=lr, v=v_acc, ls_t1=Qs, lr_t1=B)
-            return _appaware_rates(sim, st, dt * upd_every, solver=solver)
+            return _appaware_rates(sim, caps_t, st, dt * upd_every,
+                                   solver=solver)
         if policy == "appfair":
             prio = group_by_throughput(mu, n_groups)
             x = strict_priority_alloc(
-                sim.R, sim.caps, sim.app_of_flow, prio, n_groups=n_groups
+                sim.R, caps_t, sim.app_of_flow, prio, n_groups=n_groups
             )
             return jnp.where(sim.has_links, x, INTERNAL_RATE)
         raise ValueError(policy)
 
-    def body(carry, tick):
+    def body(carry, xs):
+        tick, caps_t = xs
         (Qs, Qr, B, x, v_acc, ls, lr, prod_rate, drain_ewma, mu,
          mu_acc) = carry
-        do_upd = (tick % upd_every) == 0
+        caps_upd = sim.caps if caps_t is None else caps_t
 
         def updated(_):
-            mu_new = ewma_throughput(mu, mu_acc / (dt * upd_every), alpha)
-            x_new = policy_rates(Qs, Qr, B, prod_rate, drain_ewma, v_acc,
-                                 ls, lr, mu_new)
+            mu_new = (ewma_throughput(mu, mu_acc / (dt * upd_every), alpha)
+                      if policy == "appfair" else mu)
+            x_new = policy_rates(caps_upd, Qs, Qr, B, prod_rate, drain_ewma,
+                                 v_acc, ls, lr, mu_new)
             return x_new, z, Qs, B, mu_new, jnp.zeros_like(mu_acc)
 
         def kept(_):
             return x, v_acc, ls, lr, mu, mu_acc
 
-        x, v_acc, ls, lr, mu, mu_acc = jax.lax.cond(do_upd, updated, kept, None)
+        if upd_every == 1:
+            # every-tick policies (tcp/fixed defaults): no lax.cond in the
+            # hot loop — the branch dispatch and its fusion barrier go away
+            x, v_acc, ls, lr, mu, mu_acc = updated(None)
+        else:
+            do_upd = (tick % upd_every) == 0
+            x, v_acc, ls, lr, mu, mu_acc = jax.lax.cond(
+                do_upd, updated, kept, None)
 
         Qs1, Qr1, transfer, drain, (sink, sink_app, lat, load) = _tick(
-            sim, Qs, Qr, x, dt, qcap)
-        prod_rate = (sim.w_out.T @ (sim.selectivity * (sim.M_in @ transfer)
-                                    + sim.gen_rate * dt)) / dt
-        drain_ewma = 0.5 * drain_ewma + 0.5 * drain
-        B1 = jnp.clip(B + transfer - drain * dt, 0.0, 8.0 * qcap)
+            sim, Qs, Qr, x, dt, qcap, caps_t=caps_t)
+        # per-policy carry pieces are gated *statically*: a policy that
+        # never reads prod_rate/B/mu_acc doesn't pay their per-tick ops
+        if policy == "tcp":
+            t_in = sim.M_in @ transfer
+            out_i = sim.selectivity * t_in + sim.gen_rate * dt
+            prod_rate = out_i[sim.src_of_flow] * sim.w_of_flow / dt
+            drain_ewma = 0.5 * drain_ewma + 0.5 * drain
+        if policy == "appaware":
+            B = jnp.clip(B + transfer - drain * dt, 0.0, 8.0 * qcap)
+            v_acc = v_acc + transfer
+        if policy == "appfair":
+            mu_acc = mu_acc + sink_app
         return (
-            (Qs1, Qr1, B1, x, v_acc + transfer, ls, lr, prod_rate,
-             drain_ewma, mu, mu_acc + sink_app),
+            (Qs1, Qr1, B, x, v_acc, ls, lr, prod_rate,
+             drain_ewma, mu, mu_acc),
             (sink, sink_app, lat, load),
         )
 
     mu0 = jnp.zeros((sim.n_apps,), jnp.float32)
     carry0 = (z, z, z, z, z, z, z, z, z, mu0, mu0)
-    _, ys = jax.lax.scan(body, carry0, jnp.arange(n_ticks))
-    return ys
+    # None is an empty pytree leaf: static sims stream no capacity xs
+    xs = (jnp.arange(n_ticks), caps_sched if dynamic else None)
+    _, ys = jax.lax.scan(body, carry0, xs)
+    return (*ys, caps_sched)
 
 
 def smoke_seconds(seconds: float, cap: float = 120.0) -> float:
@@ -382,7 +610,7 @@ def simulate(
     """Run one experiment (paper §VI: 600 s runs, Δt = 5 s allocator)."""
     n_ticks = int(round(smoke_seconds(seconds) / dt))
     upd_every = resolve_upd_every(policy, dt, upd_every)
-    sink, sink_app, lat, load = _run(
+    sink, sink_app, lat, load, caps_sched = _run(
         sim, policy, n_ticks, dt, upd_every,
         x_fixed=None if x_fixed is None else jnp.asarray(x_fixed, jnp.float32),
         alpha=alpha, n_groups=n_groups, qcap=qcap, solver=solver,
@@ -396,4 +624,5 @@ def simulate(
         kinds=np.asarray(sim.kinds),
         tuples_per_mb=sim.tuples_per_mb,
         dt=dt,
+        caps_t=np.asarray(caps_sched) if sim.is_dynamic else None,
     )

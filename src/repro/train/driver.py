@@ -21,7 +21,6 @@ import time
 from typing import Any, Callable
 
 import jax
-import numpy as np
 
 from repro.data.pipeline import SyntheticLM
 from repro.models.registry import ModelApi

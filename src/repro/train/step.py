@@ -1,8 +1,6 @@
 """Loss and train-step factories (arch-agnostic via the ModelApi)."""
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

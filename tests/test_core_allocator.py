@@ -12,7 +12,6 @@ from repro.core import (
     maxmin_rates,
     solve_downlink,
     solve_uplink,
-    strict_priority_alloc,
     group_by_throughput,
     ewma_throughput,
 )
@@ -238,6 +237,52 @@ class TestFusedPerLinkRates:
         np.testing.assert_allclose(
             np.asarray(allocate(prog, state, dt=1.0)), np.asarray(ref),
             atol=1e-4)
+
+
+# ----------------------------------------------------- chunked-links solve
+class TestChunkedPerLinkRates:
+    """``allocate(..., block_links=k)`` processes the link axis in chunks
+    (bounded [block, F] intermediates) and must reproduce the fused solve
+    exactly — including block sizes that don't divide L, exceed L, or
+    degenerate to one link per chunk."""
+
+    @pytest.mark.parametrize("blk", [1, 7, 16, 64])
+    def test_parity_vs_fused(self, blk):
+        from repro.core.allocator import _per_link_rates_chunked
+
+        rng = np.random.default_rng(11)
+        F, L = 40, 37
+        prog = _rand_program(rng, F, L, p=0.3)
+        state = _rand_flowstate(rng, F)
+        a = np.asarray(_per_link_rates(prog, state, 5.0))
+        b = np.asarray(_per_link_rates_chunked(prog, state, 5.0, blk))
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_property_allocate_parity(self, seed):
+        from repro.core.allocator import allocate
+
+        rng = np.random.default_rng(seed)
+        F, L = int(rng.integers(2, 40)), int(rng.integers(1, 30))
+        blk = int(rng.integers(1, L + 8))
+        prog = _rand_program(rng, F, L, p=float(rng.uniform(0.1, 0.8)))
+        state = _rand_flowstate(rng, F)
+        xa = np.asarray(allocate(prog, state, dt=1.0))
+        xb = np.asarray(allocate(prog, state, dt=1.0, block_links=blk))
+        np.testing.assert_allclose(xa, xb, atol=1e-5)
+
+    def test_zero_demand_chunked(self):
+        from repro.core.allocator import _per_link_rates_chunked
+
+        rng = np.random.default_rng(12)
+        F, L = 9, 10
+        prog = _rand_program(rng, F, L)
+        z = jnp.zeros((F,), jnp.float32)
+        state = FlowState(z, z, z, z, z)
+        np.testing.assert_allclose(
+            np.asarray(_per_link_rates_chunked(prog, state, 0.5, 4)),
+            np.asarray(_per_link_rates(prog, state, 0.5)), atol=1e-5)
 
 
 # ------------------------------------------------------------- Algorithm 1

@@ -7,7 +7,6 @@ import sys
 import textwrap
 
 import jax
-import numpy as np
 import pytest
 
 from repro.launch import hlo_stats

@@ -1,0 +1,245 @@
+"""In-run network dynamics: time-varying link capacities threaded through
+the simulator, policies, fleet engine, and metrics.
+
+Covers the PR 3 acceptance bar: a constant `LinkSchedule` reproduces the
+static path (≤ 1e-5 — in fact bitwise: zero-amplitude sinusoids and
+never-active events multiply by exactly 1.0), per-tick conservation holds
+through a failure + recovery schedule, and the cross-layer claim — the
+app-aware allocator recovers from a mid-run link failure with higher
+post-event throughput than TCP."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.net import (
+    LinkSchedule,
+    big_switch,
+    diurnal_schedule,
+    link_failure_schedule,
+)
+from repro.streams import (
+    Edge,
+    Grouping,
+    Operator,
+    StreamApp,
+    compile_sim,
+    link_failure_sweep,
+    parallelize,
+    round_robin,
+    simulate,
+    time_varying_sweep,
+    trending_topics,
+    trucking_iot,
+)
+from repro.streams.simulator import INTERNAL_RATE, _caps_over, _tick
+
+DT = 0.5
+
+
+def _seed_sim(mk=trending_topics, cap=1.25, schedule=None):
+    g = parallelize(mk(), seed=0)
+    topo = big_switch(8, cap)
+    return compile_sim(g, topo, round_robin(g, 8), schedule=schedule), topo
+
+
+class TestScheduleEvaluation:
+    def test_constant_schedule_is_identity(self):
+        topo = big_switch(4, 2.0)
+        sched = LinkSchedule.constant(topo.n_links)
+        ts = np.linspace(0.0, 600.0, 50)
+        caps = sched.caps_at(topo.capacities, ts)
+        np.testing.assert_array_equal(
+            caps, np.broadcast_to(topo.capacities, caps.shape))
+
+    def test_jax_matches_numpy_reference(self):
+        g = parallelize(trending_topics(), seed=0)
+        topo = big_switch(8, 1.25)
+        sched = (
+            link_failure_schedule(topo, [1, 3], 20.0, 40.0, degrade=0.25)
+            .with_diurnal(120.0, 0.3, phase=0.7)
+            .with_event([2], 10.0, scale=0.5)  # permanent brown-out
+        )
+        sim = compile_sim(g, topo, round_robin(g, 8), schedule=sched)
+        ts = np.arange(120, dtype=np.float32) * DT
+        caps_jax = np.asarray(_caps_over(sim, jnp.asarray(ts)))
+        caps_np = sched.caps_at(topo.capacities, ts)
+        np.testing.assert_allclose(caps_jax, caps_np, rtol=1e-5, atol=1e-6)
+
+    def test_events_compose_multiplicatively(self):
+        topo = big_switch(2, 4.0)
+        sched = (LinkSchedule.empty(topo.n_links)
+                 .with_event([0], 0.0, 10.0, scale=0.5)
+                 .with_event([0], 5.0, 10.0, scale=0.5))
+        caps = sched.caps_at(topo.capacities, np.array([2.0, 7.0, 12.0]))
+        np.testing.assert_allclose(caps[:, 0], [2.0, 1.0, 4.0], rtol=1e-6)
+
+    def test_schedule_link_count_mismatch_rejected(self):
+        g = parallelize(trending_topics(), seed=0)
+        with pytest.raises(ValueError, match="links"):
+            compile_sim(g, big_switch(8, 1.25), round_robin(g, 8),
+                        schedule=LinkSchedule.constant(3))
+
+
+class TestConstantScheduleParity:
+    """Acceptance: a constant LinkSchedule reproduces current static-caps
+    results (≤ 1e-5 on sink_mb / latency for seed scenarios)."""
+
+    @pytest.mark.parametrize("policy", ["tcp", "appaware"])
+    @pytest.mark.parametrize("mk", [trending_topics, trucking_iot])
+    def test_parity(self, mk, policy):
+        sim, topo = _seed_sim(mk)
+        simc, _ = _seed_sim(mk, schedule=LinkSchedule.constant(topo.n_links))
+        ref = simulate(sim, policy, seconds=60.0, dt=DT)
+        got = simulate(simc, policy, seconds=60.0, dt=DT)
+        np.testing.assert_allclose(got.sink_mb, ref.sink_mb, atol=1e-5)
+        np.testing.assert_allclose(got.latency, ref.latency,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got.link_load, ref.link_load, atol=1e-5)
+        # the constant schedule went down the dynamic path: caps trajectory
+        # is reported, and equals the static capacities at every tick
+        assert got.caps_t is not None and ref.caps_t is None
+        np.testing.assert_array_equal(
+            got.caps_t, np.broadcast_to(ref.caps, got.caps_t.shape))
+
+
+class TestEnforcement:
+    def test_failed_link_moves_no_bytes(self):
+        sim, topo = _seed_sim(schedule=link_failure_schedule(
+            big_switch(8, 1.25), [0, 1], 15.0, 25.0, degrade=0.0))
+        r = simulate(sim, "tcp", seconds=40.0, dt=DT)
+        i0, i1 = int(15.0 / DT), int(25.0 / DT)
+        assert np.abs(r.link_load[i0:i1, :2]).max() == 0.0
+        # and the links carry traffic again after recovery
+        assert r.link_load[i1:, 0].max() > 0.0
+
+    @pytest.mark.parametrize("policy", ["tcp", "appaware"])
+    def test_load_respects_scheduled_caps_every_tick(self, policy):
+        topo = big_switch(8, 1.25)
+        sched = (link_failure_schedule(topo, [2, 3], 10.0, 20.0, degrade=0.2)
+                 .with_diurnal(40.0, 0.3))
+        sim, _ = _seed_sim(schedule=sched)
+        r = simulate(sim, policy, seconds=40.0, dt=DT)
+        assert r.caps_t is not None
+        assert np.all(r.link_load <= r.caps_t * (1 + 1e-3) + 1e-6)
+
+
+class TestConservationUnderSchedule:
+    """Total MB conserved across transfer/consume/emit at *every tick* of a
+    failure + recovery schedule (satellite task)."""
+
+    def test_per_tick_conservation_through_failure(self):
+        app = StreamApp(
+            "cons",
+            [Operator("src", 1, gen_rate=0.8, proc_rate=100.0),
+             Operator("mid", 2, proc_rate=100.0, selectivity=1.0),
+             Operator("sink", 1, proc_rate=100.0, selectivity=0.0)],
+            [Edge("src", "mid", Grouping.SHUFFLE),
+             Edge("mid", "sink", Grouping.GLOBAL)],
+        )
+        g = parallelize(app, seed=0)
+        topo = big_switch(4, 5.0)
+        sched = link_failure_schedule(topo, list(range(topo.n_links // 2)),
+                                      10.0, 20.0, degrade=0.0)
+        sim = compile_sim(g, topo, round_robin(g, 4), schedule=sched)
+        F = g.n_flows
+        qcap = 8.0
+        x = jnp.where(sim.has_links, 5.0, INTERNAL_RATE)
+        Qs = Qr = jnp.zeros((F,), jnp.float32)
+        delivered = 0.0
+        base = np.asarray(sim.caps)
+        T = 80  # 40 s: failure at 10 s, recovery at 20 s
+        for t in range(T):
+            caps_t = jnp.asarray(sched.caps_at(base, t * DT), jnp.float32)
+            Qs, Qr, transfer, _, (sink, _, _, load) = _tick(
+                sim, Qs, Qr, x, DT, qcap, caps_t=caps_t)
+            delivered += float(sink)
+            # the network never exceeds the *scheduled* capacity
+            assert np.all(np.asarray(load) <= np.asarray(caps_t) * (1 + 1e-3))
+            # nothing minted, nothing lost — at every tick
+            generated = 0.8 * DT * (t + 1)
+            total = delivered + float(jnp.sum(Qs) + jnp.sum(Qr))
+            np.testing.assert_allclose(total, generated, rtol=1e-3)
+        # the outage actually bit: something was still queued at the end
+        assert delivered < 0.8 * DT * T
+
+
+class TestMidRunFailureRegression:
+    """Acceptance: appaware recovers from a mid-run link failure with
+    higher post-event throughput than tcp — the paper's cross-layer claim
+    exercised in its transient regime."""
+
+    T_FAIL, T_REC = 50.0, 70.0
+
+    def _post_tput(self, r, t_event):
+        i = int(t_event / r.dt)
+        return float(r.sink_mb[i:].mean() / r.dt * r.tuples_per_mb)
+
+    @pytest.mark.parametrize("mk", [trending_topics, trucking_iot])
+    def test_appaware_beats_tcp_after_failure(self, mk):
+        topo = big_switch(8, 1.25)
+        sched = link_failure_schedule(topo, [0, 1, 2, 3], self.T_FAIL,
+                                      self.T_REC, degrade=0.1)
+        g = parallelize(mk(), seed=0)
+        sim = compile_sim(g, topo, round_robin(g, 8), schedule=sched)
+        tcp = simulate(sim, "tcp", seconds=120.0, dt=DT)
+        aa = simulate(sim, "appaware", seconds=120.0, dt=DT)
+        assert (self._post_tput(aa, self.T_FAIL)
+                > self._post_tput(tcp, self.T_FAIL) * 1.10)
+
+    def test_transient_metrics(self):
+        topo = big_switch(8, 1.25)
+        sched = link_failure_schedule(topo, [0, 1, 2, 3], self.T_FAIL,
+                                      self.T_REC, degrade=0.1)
+        g = parallelize(trending_topics(), seed=0)
+        sim = compile_sim(g, topo, round_robin(g, 8), schedule=sched)
+        r = simulate(sim, "tcp", seconds=120.0, dt=DT)
+        assert r.dip_depth(self.T_FAIL) > 0.3        # the failure bites
+        assert np.isfinite(r.recovery_time_s(self.T_FAIL))
+        # a static run of the same workload shows no comparable dip
+        static, _ = _seed_sim()
+        rs = simulate(static, "tcp", seconds=120.0, dt=DT)
+        assert rs.dip_depth(self.T_FAIL) < r.dip_depth(self.T_FAIL)
+
+
+class TestInRunScenarioGenerators:
+    def test_link_failure_sweep_in_run(self):
+        scens = link_failure_sweep(n=2, seed=0, in_run=True)
+        assert all(s.schedule is not None for s in scens)
+        assert all("failrun" in s.name for s in scens)
+        sim = scens[0].compile()
+        assert sim.ev_t0.shape[0] > 0
+        r = simulate(sim, "tcp", seconds=30.0, dt=DT)
+        assert np.isfinite(r.sink_mb).all()
+
+    def test_time_varying_sweep_in_run(self):
+        scens = time_varying_sweep(n_phases=2, seed=0, in_run=True)
+        assert all(s.schedule is not None for s in scens)
+        sim = scens[0].compile()
+        assert sim.sin_amp.shape[0] > 0
+        r = simulate(sim, "appaware", seconds=30.0, dt=DT)
+        assert np.isfinite(r.sink_mb).all()
+        # the capacity actually moved during the run
+        assert r.caps_t is not None
+        assert r.caps_t.std(axis=0).max() > 0.0
+
+    def test_steady_state_forms_unchanged(self):
+        # the original phase-sampled / degraded-topology forms remain as
+        # parity oracles: no schedules attached
+        assert all(s.schedule is None for s in link_failure_sweep(n=2))
+        assert all(s.schedule is None for s in time_varying_sweep(n_phases=2))
+
+
+class TestDiurnalTracksCycle:
+    def test_throughput_follows_capacity(self):
+        # with a slow large-amplitude cycle, delivered volume in the
+        # high-capacity half-period exceeds the low-capacity half-period
+        topo = big_switch(8, 1.25)
+        sched = diurnal_schedule(topo, period_s=80.0, amplitude=0.6)
+        g = parallelize(trending_topics(), seed=0)
+        sim = compile_sim(g, topo, round_robin(g, 8), schedule=sched)
+        r = simulate(sim, "tcp", seconds=80.0, dt=DT)
+        half = int(40.0 / DT)
+        high = r.sink_mb[:half].sum()     # sin > 0: caps above base
+        low = r.sink_mb[half:].sum()      # sin < 0: caps below base
+        assert high > low * 1.05

@@ -144,6 +144,47 @@ def _two_app_sim(n_apps: int, cap: float, seed: int = 0):
                        app_of_inst=app_of_inst, n_apps=n_apps)
 
 
+class TestMixedScheduledStatic:
+    """Fleets mixing in-run capacity schedules and static scenarios batch
+    together (padded schedules are exact no-ops) without recompiling."""
+
+    def _mixed_fleet(self):
+        from repro.net import big_switch, link_failure_schedule
+
+        g = parallelize(trending_topics(), seed=0)
+        topo = big_switch(8, 1.25)
+        static = compile_sim(g, topo, round_robin(g, 8))
+        sched = link_failure_schedule(topo, [0, 1], 10.0, 20.0, degrade=0.1)
+        dyn = compile_sim(g, topo, round_robin(g, 8), schedule=sched)
+        return [static, dyn, static, dyn]
+
+    def test_no_recompile_and_parity(self):
+        sims = self._mixed_fleet()
+        runner = FleetRunner()
+        batch = runner.run(sims, "tcp", seconds=30.0, dt=DT)
+        size = runner.compile_cache_size()
+        batch2 = runner.run(sims, "tcp", seconds=30.0, dt=DT)
+        assert runner.compile_cache_size() == size
+        for sim, rb, rb2 in zip(sims, batch, batch2):
+            ref = simulate(sim, "tcp", seconds=30.0, dt=DT)
+            np.testing.assert_allclose(rb.sink_mb, ref.sink_mb, atol=1e-4)
+            np.testing.assert_array_equal(rb.sink_mb, rb2.sink_mb)
+        # scheduled members report their capacity trajectory, static don't
+        assert batch[0].caps_t is None and batch[1].caps_t is not None
+        np.testing.assert_allclose(
+            batch[1].caps_t,
+            simulate(sims[1], "tcp", seconds=30.0, dt=DT).caps_t,
+            atol=1e-6)
+
+    def test_mixed_fleet_merges_into_one_bucket(self):
+        # schedule axes pad like any other dim: forcing one bucket covers
+        # the static members with neutral (never-active) events
+        sims = self._mixed_fleet()
+        plan = _plan_buckets(sims, 1, exact_apps=False)
+        assert len(plan) == 1
+        assert plan[0][1].n_events == max(s.ev_t0.shape[0] for s in sims)
+
+
 class TestAppfairMixedApps:
     def test_heterogeneous_n_apps_batch_parity(self):
         # pre-PR this raised ValueError; the runner now buckets appfair

@@ -1,7 +1,6 @@
 """Per-kernel validation (assignment: sweep shapes/dtypes, assert_allclose
 against the pure-jnp ref.py oracle; interpret mode executes the kernel body
 on CPU)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

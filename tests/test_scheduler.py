@@ -4,7 +4,6 @@ import json
 import pathlib
 import textwrap
 
-import numpy as np
 import pytest
 
 from repro.core.scheduler import CollectiveFlow, extract_flows, plan_schedule

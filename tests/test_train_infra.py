@@ -22,7 +22,6 @@ from repro.train.compression import (
 )
 from repro.train.driver import DriverConfig, TrainDriver
 from repro.train.optim import AdamW, warmup_cosine
-from repro.train.step import make_train_step
 
 
 def _tiny():
