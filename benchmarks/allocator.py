@@ -118,8 +118,57 @@ def run() -> list[dict]:
     return rows
 
 
+def _mk_maxmin(F: int, L: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    R = np.zeros((F, L), np.float32)
+    for f in range(F):
+        R[f, rng.choice(L, size=min(3, L), replace=False)] = 1.0
+    cap = rng.uniform(1.0, 20.0, L).astype(np.float32)
+    d = rng.uniform(0.0, 10.0, F).astype(np.float32)
+    return jnp.asarray(R), jnp.asarray(cap), jnp.asarray(d)
+
+
+def run_maxmin() -> list[dict]:
+    """Max-min solver micro-bench: the fused fixed-trip fill
+    (`maxmin_fused`, the tcp/appfair hot path) vs the retained while-loop
+    clamp-and-resolve oracle (`demand_limited_maxmin`), single-instance
+    and under an 8-wide `vmap` (the fleet engine's shape) — the while
+    loop's data-dependent trip count runs at the batch max under vmap,
+    which is exactly what the fixed-trip rewrite removes."""
+    from repro.core.tcp import demand_limited_maxmin, maxmin_fused
+
+    fused = jax.jit(maxmin_fused)
+    loop = jax.jit(demand_limited_maxmin)
+    vfused = jax.jit(jax.vmap(maxmin_fused, in_axes=(0, 0, 0)))
+    vloop = jax.jit(jax.vmap(demand_limited_maxmin, in_axes=(0, 0, 0)))
+    rows = []
+    for F, L in ((64, 24), (512, 64)):
+        if SMOKE and F > 64:
+            continue
+        R, cap, d = _mk_maxmin(F, L)
+        Rb, capb, db = (jnp.stack([a] * 8) for a in (R, cap, d))
+        us_f = timeit_us(lambda: jax.block_until_ready(fused(R, cap, d)), 20)
+        us_l = timeit_us(lambda: jax.block_until_ready(loop(R, cap, d)), 20)
+        us_vf = timeit_us(
+            lambda: jax.block_until_ready(vfused(Rb, capb, db)), 20)
+        us_vl = timeit_us(
+            lambda: jax.block_until_ready(vloop(Rb, capb, db)), 20)
+        rows.append({
+            "name": f"maxmin_F{F}_L{L}",
+            "us_per_call": us_f,
+            "backend": jax.default_backend(),
+            "fused_us": round(us_f, 1),
+            "while_oracle_us": round(us_l, 1),
+            "fused_vmap8_us": round(us_vf, 1),
+            "while_vmap8_us": round(us_vl, 1),
+            "fused_over_while": round(us_l / max(us_f, 1e-9), 2),
+            "fused_over_while_vmap8": round(us_vl / max(us_vf, 1e-9), 2),
+        })
+    return rows
+
+
 def main() -> None:
-    emit(run(), "allocator")
+    emit(run() + run_maxmin(), "allocator")
 
 
 if __name__ == "__main__":

@@ -11,8 +11,8 @@ calls are tens of milliseconds, where single-shot wall-clock on a shared
 CI core is noise-dominated.
 
 On CPU the scenario axis is additionally split across forced XLA host
-devices (one per core, up to 8) via the runner's shard_map path — set
-BEFORE jax initializes, hence the env fiddling above the imports.
+devices (one per core, up to 8) via the runner's plain-SPMD sharding —
+set BEFORE jax initializes, hence the env fiddling above the imports.
 
     PYTHONPATH=src python benchmarks/fleet.py
 """

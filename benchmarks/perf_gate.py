@@ -1,0 +1,59 @@
+"""CI perf gate: fail the job when the fleet warm-path speedup regresses.
+
+Parses ``BENCH_fleet.json`` (written by ``benchmarks/fleet.py``) and
+asserts ``speedup_warm`` per policy against a checked-in floor. Two modes:
+
+* **smoke** (``REPRO_SMOKE=1``, the CI runner): floors are deliberately
+  conservative — the shared 2-core runner's wall-clock is noisy and the
+  sequential baseline there is itself fast, so the gate only catches real
+  regressions (e.g. a solver change that re-serializes the batch), not
+  scheduling jitter.
+* **full** (REPRO_SMOKE unset): asserts the ROADMAP target for the
+  measured-and-re-scoped warm-path item.
+
+    PYTHONPATH=src:. python benchmarks/perf_gate.py [path/to/BENCH_fleet.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# Conservative smoke floors for the noisy 2-core CI runner: ~60% of the
+# values measured on the same container class after the fused max-min
+# solver landed (tcp 1.92, appaware 2.22 — see BENCH_fleet.json / ROADMAP;
+# repeat runs on a contended core dipped as low as ~1.45/1.55).
+SMOKE_FLOORS = {"fleet_tcp": 1.2, "fleet_appaware": 1.3}
+# Full-mode floors: the re-scoped warm-path item (ROADMAP "after PR 4"):
+# ≥ 1.9/2.2 measured on a quiet 2-core CPU, asserted with ~20% slack.
+FULL_FLOORS = {"fleet_tcp": 1.5, "fleet_appaware": 1.7}
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        rows = json.load(f)
+    smoke = os.environ.get("REPRO_SMOKE", "").strip() not in ("", "0")
+    floors = SMOKE_FLOORS if smoke else FULL_FLOORS
+    by_name = {r.get("name"): r for r in rows}
+    failures = []
+    for name, floor in floors.items():
+        row = by_name.get(name)
+        if row is None:
+            failures.append(f"{name}: missing from {path}")
+            continue
+        got = float(row.get("speedup_warm", 0.0))
+        status = "ok" if got >= floor else "REGRESSED"
+        print(f"{name}: speedup_warm={got:.2f} floor={floor:.2f} [{status}]")
+        if got < floor:
+            failures.append(
+                f"{name}: speedup_warm {got:.2f} < floor {floor:.2f}")
+    if failures:
+        print("perf gate FAILED:\n  " + "\n  ".join(failures))
+        return 1
+    print(f"perf gate passed ({'smoke' if smoke else 'full'} floors)")
+    return 0
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_fleet.json"
+    sys.exit(check(path))

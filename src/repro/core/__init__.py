@@ -11,7 +11,12 @@ from repro.core.allocator import (  # noqa: F401
     solve_downlink,
     solve_uplink,
 )
-from repro.core.tcp import demand_limited_maxmin, maxmin_rates  # noqa: F401
+from repro.core.tcp import (  # noqa: F401
+    demand_limited_maxmin,       # while-loop parity oracle
+    demand_limited_maxmin_np,    # sequential numpy reference
+    maxmin_fused,                # the hot-path fixed-trip solver
+    maxmin_rates,                # while-loop parity oracle
+)
 from repro.core.multiapp import (  # noqa: F401
     AppFairScheduler,
     ewma_throughput,

@@ -19,7 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.tcp import maxmin_rates
+from repro.core.tcp import maxmin_fused, maxmin_rates
 
 _EPS = 1e-9
 
@@ -54,18 +54,29 @@ def strict_priority_alloc(
     n_groups: int = 8,
 ) -> jnp.ndarray:
     """Multi-level strict-priority scheduler: per priority level (high→low)
-    run max-min among that level's flows on the residual capacity."""
+    run max-min among that level's flows on the residual capacity.
+
+    Uses the fused fixed-trip solver (`maxmin_fused`) with an
+    always-slack demand cap (no single flow can exceed the total network
+    capacity), so — like the tcp policy — the appfair hot path contains no
+    data-dependent ``lax.while_loop``: a level's flows that cross no
+    congested link get the slack cap, exactly where the while-loop oracle
+    returned +inf (both are clamped by the caller's link mask)."""
     F, L = R.shape
     prio_of_flow = app_priority[app_of_flow]
     x = jnp.zeros((F,), R.dtype)
+    on_net = jnp.sum(R, axis=1) > 0
+    # any on-net flow's rate is bounded by the largest link it crosses, so
+    # the total capacity is a demand cap that never binds below saturation
+    cap_bound = jnp.sum(capacity) + 1.0
 
     def level(p, x):
         used = jnp.sum(R * x[:, None], axis=0)
         resid = jnp.maximum(capacity - used, 0.0)
-        sel = (prio_of_flow == p).astype(R.dtype)
-        rates = maxmin_rates(R, resid, sel)
-        rates = jnp.where(jnp.isfinite(rates), rates, 0.0)
-        return x + rates * sel
+        sel = prio_of_flow == p
+        demand = jnp.where(sel & on_net, cap_bound, 0.0)
+        rates = maxmin_fused(R, resid, demand)
+        return x + rates * sel.astype(R.dtype)
 
     return jax.lax.fori_loop(0, n_groups, level, x)
 

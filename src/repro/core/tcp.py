@@ -2,12 +2,28 @@
 
 The paper's baseline is the default transport of Storm/Heron/Flink — TCP
 congestion control, which (idealized) converges to max-min fair rates among
-flows sharing bottleneck links. We implement exact max-min via progressive
-filling on the routing matrix: per round, find the tightest fair share and
-freeze every link (and its flows) at that water level, repeat. Implemented
-with `lax.while_loop` so it jits and batches; the trip count tracks the
-number of distinct bottleneck *levels* (typically a handful), not the link
-count — padded links in the fleet engine never bind and cost nothing.
+flows sharing bottleneck links.
+
+Two implementations live here:
+
+* :func:`maxmin_fused` — the **hot-path solver**: a fused, fixed-trip-count
+  progressive fill with per-flow demand caps folded directly into each
+  round. ONE demand-rank matrix (the argsort as a 0/1 GEMM operand) is
+  shared by every link; per round each link's exact saturation water level
+  (``Σ_f min(d_f, θ) = resid_l``) drops out of batched rank-prefix sums —
+  the allocator's weighted-simplex prefix rule (`_solve_link_block`)
+  generalized to multi-link coupling. Every *locally minimal* link (no
+  cheaper neighbor in the link-conflict graph) freezes per round, so the
+  trip count tracks the depth of the strictly-increasing bottleneck-level
+  chain, not the link count — and because the trip count is static there
+  is **no ``lax.while_loop``**: the solver batches under `vmap`/SPMD
+  sharding with zero data-dependent control flow.
+
+* :func:`maxmin_rates` / :func:`demand_limited_maxmin` — the original
+  while-loop progressive filling and its 4-round clamp-and-resolve demand
+  wrapper, retained as **parity oracles** (same pattern as the allocator's
+  `_per_link_rates_vmap`), plus :func:`demand_limited_maxmin_np`, a plain
+  numpy sequential reference with unbounded rounds.
 """
 from __future__ import annotations
 
@@ -15,9 +31,30 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 _EPS = 1e-9
 _INF = jnp.inf
+
+# Trip count of the hot-path fused fill. Each round freezes EVERY locally
+# minimal bottleneck level in parallel, so rounds + 1 (the closing sweep
+# resolves one further level) must cover the depth of the strictly-
+# increasing bottleneck-level chain in the link-conflict graph — measured
+# ≤ 3 across the seed-corpus routing structure, which 2 + sweep covers
+# exactly: fleet trajectories are bitwise-identical to the while-loop
+# oracle's at this setting (tests/test_maxmin_fused.py::TestCorpusRounds).
+# The per-tick policy cost is (rounds + 1) water-level evaluations on a
+# kernel-overhead-bound CPU path, so the default deliberately carries no
+# slack. Deeper instances stay link-feasible (the sweep assigns
+# min(demand, bottleneck level), which provably never oversubscribes a
+# link); only the max-min refinement of the tail levels would be
+# approximate. Pass ``rounds=None`` for the provably exact shape bound
+# min(F, L) + 1 (each round saturates ≥ 1 link or demand-freezes every
+# remaining flow).
+FILL_ROUNDS = 2
+
+_RTOL = 1e-6   # tie tolerance for water-level comparisons (relative)
+_ATOL = 1e-6   # ... and absolute, for levels near zero
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -90,3 +127,164 @@ def demand_limited_maxmin(R, capacity, demand, iters: int = 4):
 
     x, _ = jax.lax.fori_loop(0, iters, body, (x, satisfied))
     return jnp.where(jnp.isfinite(x), x, demand)
+
+
+# --------------------------------------------------------------------------
+# fused fixed-trip solver (the policy hot path)
+# --------------------------------------------------------------------------
+def _link_levels(A, m, resid):
+    """Exact demand-capped saturation level θ_l per link: the unique θ with
+    ``Σ_{unfrozen f on l} min(d_f, θ) = resid_l`` (+inf if the link cannot
+    saturate: no unfrozen flows, or their total demand fits in resid).
+
+    Rank-prefix form, no sorting: ``A`` stacks ``[W; 1; W·d; d]`` where
+    ``W[f, g] = [d_g ≤ d_f]`` (ties broken by index) is the demand order as
+    a 0/1 matrix — built once per solve — so EVERY per-link quantity the
+    prefix rule needs (rank prefixes of counts and demands, plus their
+    totals) drops out of ONE shared matmul ``A @ m`` per round in
+    *original* flow order: under the fleet vmap a single batched GEMM,
+    where per-link sorts (or batched cumsums) serialize on CPU backends.
+    Selection needs no validity filter at all: the candidate level for the
+    prefix capped at flow f is the root of the chord ``Σ_{d_g ≤ d_f} d_g +
+    (#rest)·θ``, which upper-bounds ``Σ min(d, θ)`` pointwise, so every
+    candidate root lower-bounds the true θ and the consistent prefix
+    attains it — θ is simply the MAX over candidates (incl. the
+    nothing-capped chord ``resid/n``). ``m`` [F, L] is the routing mask
+    restricted to unfrozen flows. Returns θ [L].
+    """
+    F = m.shape[0]
+    P = A @ m                                                 # [2F+2, L]
+    cum_n, n_l = P[:F], P[F]
+    cum_d, sum_d = P[F + 1:2 * F + 1], P[2 * F + 1]
+    denom = n_l[None, :] - cum_n
+    theta_k = (resid[None, :] - cum_d) / jnp.maximum(denom, 0.5)
+    cand = jnp.where((m > 0) & (denom > 0.5), theta_k, -_INF)
+    theta = jnp.maximum(jnp.max(cand, axis=0),
+                        resid / jnp.maximum(n_l, 1.0))
+    saturable = (n_l > 0) & (sum_d > resid * (1.0 + _RTOL) + _ATOL)
+    return jnp.where(saturable, theta, _INF)
+
+
+@functools.partial(jax.jit, static_argnames=("rounds",))
+def maxmin_fused(R: jnp.ndarray, capacity: jnp.ndarray, demand: jnp.ndarray,
+                 rounds: int | None = FILL_ROUNDS) -> jnp.ndarray:
+    """Demand-limited max-min fair rates as a fused fixed-trip program.
+
+    R: [F, L] binary routing; capacity: [L]; demand: [F] per-flow caps.
+    Flows traversing no link get their demand (unconstrained), matching
+    :func:`demand_limited_maxmin`. ``rounds=None`` selects the provably
+    exact shape bound min(F, L) + 1; the default ``FILL_ROUNDS`` is exact
+    whenever the bottleneck-level chain is no deeper (always, on the seed
+    corpus) and link-feasible regardless.
+
+    Per round: compute every link's exact demand-capped water level θ_l
+    (:func:`_link_levels`), then freeze every link that is *locally
+    minimal* — θ_l ≤ θ_m for every link m sharing an unfrozen flow — at its
+    level, its flows at ``min(d_f, θ_l)``, plus every flow whose demand is
+    covered by all of its links (``d_f ≤ min_l θ_l``). Water levels are
+    monotone nondecreasing across rounds, so locally minimal freezing is
+    confluent with classic sequential progressive filling: the rounds
+    needed equal the depth of the increasing bottleneck-level chain. A
+    closing sweep assigns any still-unfrozen flow ``min(d_f, min_l θ_l)``,
+    which never oversubscribes a link (Σ_f min(d_f, θ_flow) ≤
+    Σ_f min(d_f, θ_l) = resid_l), so truncated runs stay feasible.
+    """
+    F, L = R.shape
+    if rounds is None:
+        rounds = min(F, L) + 1
+    R = R.astype(jnp.float32)
+    on_net = jnp.sum(R, axis=1) > 0
+    d = jnp.where(on_net, jnp.maximum(demand, 0.0), 0.0)
+    # demand rank order as a 0/1 matrix (ties by flow index): the shared
+    # "argsort" of the fill, built once per solve. Stacked with its
+    # demand-weighted form and two total rows into ONE left operand so each
+    # round's prefix sums and totals are a single GEMM (`_link_levels`).
+    idx = jnp.arange(F)
+    W = ((d[None, :] < d[:, None])
+         | ((d[None, :] == d[:, None])
+            & (idx[None, :] <= idx[:, None]))).astype(jnp.float32)
+    A = jnp.concatenate([W, jnp.ones((1, F), jnp.float32),
+                         W * d[None, :], d[None, :]], axis=0)  # [2F+2, F]
+
+    def body(_, carry):
+        x, frozen, resid = carry
+        u = (~frozen) & on_net
+        m = R * u[:, None].astype(R.dtype)                    # [F, L]
+        theta = _link_levels(A, m, resid)                     # [L]
+        # per-flow bottleneck level: tightest link on the flow's route
+        th_flow = jnp.min(jnp.where(R > 0, theta[None, :], _INF), axis=1)
+        # locally minimal links: no unfrozen flow of theirs sees a tighter
+        # link elsewhere (th_flow ≤ θ_l always, so this is a tie test)
+        nbr = jnp.min(jnp.where(m > 0, th_flow[:, None], _INF), axis=0)
+        freeze_l = jnp.isfinite(theta) & (
+            theta <= nbr * (1.0 + _RTOL) + _ATOL)
+        hit = (jnp.sum(R * freeze_l[None, :].astype(R.dtype), axis=1)
+               > 0) & u
+        sated = u & (d <= th_flow * (1.0 + _RTOL) + _ATOL)
+        newf = hit | sated
+        vals = jnp.minimum(d, th_flow)        # th_flow=inf → demand
+        x = jnp.where(newf, vals, x)
+        resid = jnp.maximum(
+            resid - jnp.where(newf, vals, 0.0) @ R, 0.0)
+        return x, frozen | newf, resid
+
+    x0 = jnp.zeros((F,), jnp.float32)
+    frozen0 = ~on_net    # off-net flows take no capacity; handled below
+    x, frozen, resid = jax.lax.fori_loop(
+        0, rounds, body, (x0, frozen0, capacity.astype(jnp.float32)))
+    # closing sweep: any leftover flow rides its current bottleneck level —
+    # always link-feasible, exact when the loop already converged
+    m = R * ((~frozen) & on_net)[:, None].astype(R.dtype)
+    theta = _link_levels(A, m, resid)
+    th_flow = jnp.min(jnp.where(R > 0, theta[None, :], _INF), axis=1)
+    x = jnp.where(frozen, x, jnp.minimum(d, th_flow))
+    return jnp.where(on_net, x, demand)
+
+
+def demand_limited_maxmin_np(R, capacity, demand):
+    """Plain-numpy sequential progressive filling with demand caps —
+    unbounded rounds, one bottleneck event at a time. The slow, obviously-
+    correct reference the fused solver (and the while-loop oracles) are
+    property-tested against."""
+    R = np.asarray(R, np.float64)
+    resid = np.asarray(capacity, np.float64).copy()
+    d = np.asarray(demand, np.float64)
+    F, L = R.shape
+    on_net = R.sum(1) > 0
+    x = np.where(on_net, 0.0, d)
+    frozen = ~on_net
+    d = np.where(on_net, np.maximum(d, 0.0), 0.0)
+    for _ in range(F + L + 1):
+        u = ~frozen
+        if not u.any():
+            break
+        # exact saturation level per link (sort the link's own demands)
+        theta = np.full(L, np.inf)
+        for link in range(L):
+            f = u & (R[:, link] > 0)
+            n = int(f.sum())
+            if n == 0 or d[f].sum() <= resid[link] + 1e-12:
+                continue  # link cannot saturate: no level
+            ds = np.sort(d[f])
+            capped = 0.0
+            for k in range(n):
+                t = (resid[link] - capped) / (n - k)
+                if t <= ds[k] + 1e-15:   # guaranteed for some k: Σd > resid
+                    theta[link] = t
+                    break
+                capped += ds[k]
+        th_flow = np.where(
+            on_net, np.min(np.where(R > 0, theta[None, :], np.inf), 1), np.inf
+        )
+        lvl = np.inf if not u.any() else np.nanmin(th_flow[u])
+        # freeze demand-satisfied flows first, else the single tightest level
+        sated = u & (d <= th_flow + 1e-12)
+        if sated.any():
+            newf = sated
+        else:
+            newf = u & (th_flow <= lvl * (1 + 1e-12))
+        vals = np.minimum(d, th_flow)
+        x = np.where(newf, vals, x)
+        resid = np.maximum(resid - (vals * newf) @ R, 0.0)
+        frozen |= newf
+    return x

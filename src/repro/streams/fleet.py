@@ -70,8 +70,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.net.topology import LinkKind
 from repro.streams.simulator import (
@@ -325,15 +324,21 @@ def _fleet_executable(n_shards: int, policy: str, n_ticks: int, dt: float,
                       solver: str):
     """Build (and cache) the jitted fleet entry point.
 
-    With ``n_shards`` > 1 the batch axis is split across local devices via
-    ``shard_map`` — each device runs its own *independent* vmapped scan, so
-    data-dependent ``while_loop``s inside the policies (e.g. the max-min
-    progressive filling) keep device-local trip counts instead of paying a
-    cross-device all-reduce on every iteration (which is what a plain
-    SPMD-sharded batch axis would do). The stacked batch (and x_fixed)
-    buffers are donated on dispatch: XLA may reuse their memory for the
-    trajectory outputs on the warm path; the runner's numpy staging buffers
-    remain the host-side copy and are re-pushed on the next call.
+    With ``n_shards`` > 1 the batch axis is split across local devices as
+    **plain SPMD sharding** (``jit`` + ``in_shardings`` on the scenario
+    axis). Earlier revisions wrapped the body in ``shard_map`` so the
+    data-dependent ``while_loop``s inside the policies (the max-min
+    progressive filling) kept device-local trip counts — a plain
+    SPMD-sharded batch axis paid a cross-device all-reduce on every loop
+    predicate. The fused fixed-trip max-min solver
+    (:func:`repro.core.tcp.maxmin_fused`) removed the last data-dependent
+    control flow from every policy, so the partitioner now sees a purely
+    batch-parallel program and the ``shard_map`` staging (and its
+    ``check_rep=False`` escape hatch) is unnecessary. The stacked batch
+    (and x_fixed) buffers are donated on dispatch: XLA may reuse their
+    memory for the trajectory outputs on the warm path; the runner's numpy
+    staging buffers remain the host-side copy and are re-pushed on the
+    next call.
     """
     key = (n_shards, policy, n_ticks, dt, upd_every, alpha, n_groups, solver)
     fn = _EXECUTABLES.get(key)
@@ -348,10 +353,12 @@ def _fleet_executable(n_shards: int, policy: str, n_ticks: int, dt: float,
 
     if n_shards > 1:
         mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("scenarios",))
-        s, r = PartitionSpec("scenarios"), PartitionSpec()
-        impl = shard_map(impl, mesh=mesh, in_specs=(s, s, r), out_specs=s,
-                         check_rep=False)
-    fn = jax.jit(impl, donate_argnums=(0, 1))
+        batch = NamedSharding(mesh, PartitionSpec("scenarios"))
+        rep = NamedSharding(mesh, PartitionSpec())
+        fn = jax.jit(impl, in_shardings=(batch, batch, rep),
+                     donate_argnums=(0, 1))
+    else:
+        fn = jax.jit(impl, donate_argnums=(0, 1))
     _EXECUTABLES[key] = fn
     return fn
 

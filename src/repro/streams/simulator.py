@@ -48,7 +48,7 @@ from repro.core.multiapp import (
     group_by_throughput,
     strict_priority_alloc,
 )
-from repro.core.tcp import demand_limited_maxmin
+from repro.core.tcp import maxmin_fused
 from repro.net.topology import LinkSchedule, Topology
 from repro.streams.app import InstanceGraph, source_sink_paths
 
@@ -368,7 +368,10 @@ def _tcp_rates(sim: CompiledSim, caps_t, Qs, Qr, prod_rate, drain_ewma,
     send = Qs / dt + prod_rate
     rwnd = jnp.maximum(qcap - Qr, 0.0) / dt + drain_ewma
     demand = jnp.minimum(send, rwnd)
-    x = demand_limited_maxmin(sim.R, caps_t, demand)
+    # fused fixed-trip max-min (demand caps folded into the fill): no
+    # lax.while_loop in the per-tick hot path, so the policy batches under
+    # vmap/SPMD exactly like appaware's allocator does
+    x = maxmin_fused(sim.R, caps_t, demand)
     return jnp.where(sim.has_links, jnp.minimum(x, demand), INTERNAL_RATE)
 
 

@@ -202,6 +202,60 @@ class TestMidRunFailureRegression:
         assert rs.dip_depth(self.T_FAIL) < r.dip_depth(self.T_FAIL)
 
 
+class TestTransientCalibration:
+    """Golden-trace regression pinning the transient metrics of the PR 3
+    mid-run 4-link-failure scenario (the paper's Fig. 5/12 regime): solver
+    or policy changes that silently shift dip depth or settling time now
+    fail here instead of drifting unnoticed. The simulator is
+    deterministic, so the bands only absorb float/jax-version jitter
+    (recovery time is additionally quantized by the 5 s smoothing window).
+
+    Goldens measured with the fused fixed-trip max-min solver (PR 4) at
+    seconds=120, dt=0.5 — reproduce with:
+        PYTHONPATH=src:tests python -c "from test_dynamics import \
+            TestTransientCalibration as T; T().print_goldens()"
+    """
+
+    T_FAIL, T_REC = 50.0, 70.0
+    DIP_BAND = 0.05          # absolute band on the fractional dip
+    REC_BAND_S = 3.0         # band on settling time (6 ticks)
+
+    # (workload, policy) -> (dip_depth, recovery_time_s)
+    GOLDEN = {
+        ("trending_topics", "tcp"): (0.899, 23.0),
+        ("trending_topics", "appaware"): (0.988, 26.5),
+        ("trucking_iot", "tcp"): (0.898, 23.0),
+        ("trucking_iot", "appaware"): (0.902, 25.5),
+    }
+
+    def _run(self, mk, policy):
+        topo = big_switch(8, 1.25)
+        sched = link_failure_schedule(topo, [0, 1, 2, 3], self.T_FAIL,
+                                      self.T_REC, degrade=0.1)
+        g = parallelize(mk(), seed=0)
+        sim = compile_sim(g, topo, round_robin(g, 8), schedule=sched)
+        r = simulate(sim, policy, seconds=120.0, dt=DT)
+        return r.dip_depth(self.T_FAIL), r.recovery_time_s(self.T_FAIL)
+
+    def print_goldens(self):  # regeneration helper, not collected
+        for mk in (trending_topics, trucking_iot):
+            for policy in ("tcp", "appaware"):
+                dip, rec = self._run(mk, policy)
+                print(f'("{mk.__name__}", "{policy}"): '
+                      f'({dip:.3f}, {rec:.1f}),')
+
+    @pytest.mark.parametrize("policy", ["tcp", "appaware"])
+    @pytest.mark.parametrize("mk", [trending_topics, trucking_iot])
+    def test_transients_match_golden(self, mk, policy):
+        dip, rec = self._run(mk, policy)
+        g_dip, g_rec = self.GOLDEN[(mk.__name__, policy)]
+        assert abs(dip - g_dip) <= self.DIP_BAND, (
+            f"dip_depth {dip:.3f} drifted from golden {g_dip:.3f}")
+        assert np.isfinite(rec)
+        assert abs(rec - g_rec) <= self.REC_BAND_S, (
+            f"recovery_time_s {rec:.1f} drifted from golden {g_rec:.1f}")
+
+
 class TestInRunScenarioGenerators:
     def test_link_failure_sweep_in_run(self):
         scens = link_failure_sweep(n=2, seed=0, in_run=True)

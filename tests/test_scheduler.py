@@ -52,8 +52,18 @@ class TestExtractFlows:
         assert sched.order == []
 
 
-@pytest.mark.skipif(not RESULTS.exists() or not list(RESULTS.glob("*.json")),
-                    reason="dry-run artifacts not generated yet")
+# Skip audit (PR 4): all four tests below validate artifacts that only the
+# dry-run driver produces, and producing them is NOT tier-1 material — it
+# fakes 512 host devices and XLA-compiles every (arch × shape × mesh) cell
+# of the production meshes, minutes per cell on a CPU runner. The blocker
+# is therefore real (no artifacts in a fresh checkout), not stale; the
+# reason names the exact regeneration command so the skip is actionable.
+@pytest.mark.skipif(
+    not RESULTS.exists() or not list(RESULTS.glob("*.json")),
+    reason="results/dryrun/*.json absent — generate with "
+           "`PYTHONPATH=src python -m repro.launch.dryrun --arch all "
+           "--shape all` (fakes 512 host devices; XLA-compiles every "
+           "arch×shape×mesh cell, far too slow for tier-1)")
 class TestDryrunArtifacts:
     def _records(self):
         return [json.loads(f.read_text()) for f in RESULTS.glob("*.json")]
