@@ -17,6 +17,7 @@ from repro.streams.fleet import (  # noqa: F401
 from repro.streams.placement import STRATEGIES, round_robin, packed, traffic_aware  # noqa: F401
 from repro.streams.scenarios import (  # noqa: F401
     Scenario,
+    bench_fleet,
     capacity_sweep,
     compile_fleet,
     link_failure_sweep,

@@ -1,60 +1,82 @@
 """Batched multi-scenario simulation: run a *fleet* of independent
-simulations as shape-bucketed, jitted ``jax.vmap``-over-``lax.scan``
-programs behind a persistent :class:`FleetRunner`.
+simulations as ONE fused, jitted executable per run behind a persistent
+:class:`FleetRunner`.
 
 The paper validates Alg. 1 on one 10-workstation topology (§VI); every
 follow-up question — capacity sweeps, placement studies, link failures,
 random-DAG robustness — is "run the same simulator on N variants". Doing
 that as a python loop costs N separate XLA compilations (every scenario has
 its own [F, L, I] shape) plus N dispatch streams. Padding everything to the
-*global* max shape fixes the compile count but makes the post-compile path
-padding-bound when shapes are heterogeneous. The runner splits the
-difference:
+*global* max shape fixes the compile count but inflates the solver GEMMs
+(the max-min fill is O(F²·L): padding a 9-flow scenario to 17 flows × 32
+links costs ~7× its true solve). The runner splits the difference:
 
-  1. **Shape bucketing** — scenarios are grouped into at most
-     ``max_buckets`` buckets by greedy agglomerative merging under a
-     padded-FLOP waste model (:func:`_flop_cost`): starting from one bucket
-     per distinct true shape, the pair whose merge adds the least padded
-     compute is merged until the budget is met. Each bucket pads only to
-     *its own* cover shape, so a fleet of mostly-small scenarios no longer
-     pays the largest member's shape on every tick.
-  2. **Compile caching** — each bucket dispatches through one module-level
-     jitted entry point; XLA caches one executable per
-     ``(bucket shape, policy, solver, n_ticks, upd_every, dt)`` key, so
-     repeat studies (parameter sweeps re-using the same fleet) reuse
-     executables across calls. :meth:`FleetRunner.compile_cache_size`
-     exposes the cache occupancy for no-recompile assertions.
-  3. **Staging buffers** — per ``(bucket shape, batch)`` the runner keeps
-     preallocated numpy buffers; repeat calls re-stack scenarios by slice
-     assignment into the existing buffers instead of re-padding every leaf
-     through fresh allocations.
-  4. **Donation** — the stacked device buffers are donated to the jitted
-     call (``donate_argnums``), letting XLA reuse their memory for the
-     trajectory outputs on the warm path; the numpy staging copies remain
-     the host-side source of truth.
+  1. **Overhead-aware shape bucketing** — scenarios are grouped into at
+     most ``max_buckets`` buckets by greedy agglomerative merging under a
+     *two-term* cost model (:func:`_flop_cost` + ``tick_overhead``):
+     starting from one bucket per distinct true shape, merging a pair
+     trades the padded-FLOP waste it adds against the fixed per-bucket
+     per-tick overhead it removes (every bucket contributes one more set
+     of scan-iteration ops per tick). ``max_buckets`` is a *cap*, not the
+     operative knob: cheap-tick fleets (the "fixed" policy, tiny shapes)
+     collapse to one bucket because overhead dominates, while
+     solver-heavy fleets (tcp re-solves an O(F²L) max-min every tick)
+     keep tighter buckets because padded FLOPs dominate. The FLOP model
+     is policy-aware (tcp re-solves every tick; appaware pays its
+     allocator per controller interval; scheduled shapes add the
+     enforcement machinery; "fixed" pays the base tick only).
+  2. **Single-dispatch packed execution** — all buckets of a plan run
+     inside ONE jitted executable per (pack signature, policy, solver,
+     n_ticks, …) key: each bucket keeps its own padded shape (no
+     global-cover FLOP inflation) as its own vmap-over-scan inside the one
+     XLA program, and a warm fleet run is exactly one kernel dispatch
+     however many buckets the plan holds. Per-bucket results are
+     bitwise-identical to dispatching each bucket as its own executable
+     (``fused=False`` keeps that mode as the parity oracle); a fused
+     single *scan* over all buckets was measured slower on CPU and
+     non-bitwise (XLA cross-fuses the bucket bodies), so each bucket
+     keeps its own scan.
+  3. **Compile caching** — executables are cached per runner instance
+     (``FleetRunner.compile_cache_size`` exposes occupancy for
+     no-recompile assertions; two runners can never poison each other's
+     counts). Bucket batch rows are rounded up to a small capacity quantum
+     (:func:`_round_rows`), so a fleet that grows only in scenario count
+     within the padded capacity reuses the executable without recompiling.
+  4. **Staging buffers** — per (bucket shape, members, rows) the runner
+     keeps preallocated numpy buffers; repeat calls re-stack scenarios by
+     slice assignment into the existing buffers instead of re-padding
+     every leaf through fresh allocations. Spare capacity rows simply keep
+     their pad values: they are *inert scenarios* (zero generation/demand,
+     huge-capacity INTERNAL links, never-active events) whose rows are
+     dropped on return.
+  5. **Device-resident packs** — each staged bucket is pushed to the
+     device(s) once (pre-placed under the scenario-axis sharding) and the
+     same arrays are re-passed on every warm call, so the steady state
+     transfers nothing and converts nothing per call (~10² numpy→device
+     conversions otherwise, milliseconds against a tens-of-ms run).
+     Earlier revisions donated the input buffers instead; donation and
+     input reuse are mutually exclusive, and on the fleet's small packs
+     the saved H2D/conversion work beats the saved output allocation.
 
 Padding within a bucket is *neutral by construction*: padded flows have no
 routing-matrix entries, no producers, and zero queues, so they move no
 bytes; padded links carry huge capacity and INTERNAL kind, so no solver
-ever binds on them; padded instances generate/consume nothing; padded path
-rows are all zero (the latency estimate is a pre-normalized sum, see
-``compile_sim``); padded capacity-schedule components are exact no-ops
-(zero-amplitude sinusoids, never-active events), so fleets mixing
-scheduled and static scenarios batch together without recompiling. A
-padded sim's trajectory equals the unpadded one's on the real entries —
-with one carve-out: a static sim padded into a *scheduled* bucket takes
-the per-tick capacity-enforcement path, which only coincides with its
-standalone trajectory when the rate vector is link-feasible. The solver
-policies guarantee that; brute-force ``x_fixed`` studies deliberately
-don't, so "fixed" fleets bucket static and scheduled scenarios separately
-(``split_sched``).
+ever binds on them; padded instances generate/consume nothing; padded
+capacity-schedule components are exact no-ops (zero-amplitude sinusoids,
+never-active events), so fleets mixing scheduled and static scenarios
+batch together without recompiling. A static scenario padded into a
+*scheduled* bucket keeps its exact static semantics through the
+per-scenario enforcement mask threaded into ``_tick`` (an un-enforced row
+multiplies its transfer by exactly 1.0 — bitwise the static path), which
+is also what lets brute-force ``x_fixed`` studies with deliberately
+link-infeasible rate vectors share buckets with scheduled scenarios.
 
 Exact parity with per-scenario ``simulate`` holds for every policy,
 **including "appfair"**: its priority grouping depends on the number of
 apps, so the runner buckets appfair fleets by *exact* ``n_apps`` (buckets
 already group by shape; the app axis is simply never padded across
-scenarios that disagree on app count) instead of restricting fleets to a
-single app count.
+scenarios that disagree on app count) — heterogeneous-app fleets still run
+as one dispatch, since every bucket lives in the same executable.
 
 ``pad_sim`` / ``stack_sims`` remain as the one-shot stacking primitives;
 ``simulate_many`` is a thin wrapper over a module-level runner, so the PR 1
@@ -63,7 +85,7 @@ API is unchanged.
 from __future__ import annotations
 
 import dataclasses
-import warnings
+import math
 import weakref
 from typing import Sequence
 
@@ -84,6 +106,23 @@ from repro.streams.simulator import (
 # padded links must never constrain any solver: effectively infinite pipes
 _PAD_CAP = 1e9
 
+# Fixed per-bucket per-tick overhead, in the same proxy-FLOP units as
+# `_flop_cost`: every bucket adds one more set of scan-iteration ops
+# (dispatch of each fused kernel, loop bookkeeping) per tick, independent
+# of how many scenarios ride in it. Calibrated against the
+# `fleet_dispatch_floor` row of `benchmarks/fleet.py` on the 2-core CI
+# container: the no-solver "fixed" corpus run costs ≈4 µs per extra
+# bucket-tick (dispatch_4_s − dispatch_1_s ≈ 1.4 ms over 3 extra buckets
+# × 120 ticks) while the solver GEMMs sustain ≈3.7 GFLOP/s, i.e. one
+# bucket-tick of overhead trades against ≈15k padded FLOPs. Wide backends
+# hide per-op overhead behind real parallel width, so the default there
+# leans toward tighter buckets.
+TICK_OVERHEAD_FLOPS_CPU = 15e3
+
+
+def _default_tick_overhead() -> float:
+    return TICK_OVERHEAD_FLOPS_CPU if jax.default_backend() == "cpu" else 2e3
+
 
 @dataclasses.dataclass(frozen=True)
 class FleetShape:
@@ -92,7 +131,6 @@ class FleetShape:
     n_flows: int
     n_links: int
     n_insts: int
-    n_paths: int
     n_apps: int
     # capacity-schedule axes: sinusoidal components / failure events.
     # Padded sinusoids have zero amplitude, padded events never activate,
@@ -107,7 +145,6 @@ class FleetShape:
             n_flows=max(s.R.shape[0] for s in sims),
             n_links=max(s.R.shape[1] for s in sims),
             n_insts=max(s.M_in.shape[0] for s in sims),
-            n_paths=max(s.paths.shape[0] for s in sims),
             n_apps=max(s.n_apps for s in sims),
             n_sins=max(s.sin_amp.shape[0] for s in sims),
             n_events=max(s.ev_t0.shape[0] for s in sims),
@@ -122,41 +159,69 @@ class FleetShape:
 def _sim_shape(sim: CompiledSim) -> FleetShape:
     return FleetShape(
         n_flows=sim.R.shape[0], n_links=sim.R.shape[1],
-        n_insts=sim.M_in.shape[0], n_paths=sim.paths.shape[0],
-        n_apps=sim.n_apps, n_sins=sim.sin_amp.shape[0],
-        n_events=sim.ev_t0.shape[0])
+        n_insts=sim.M_in.shape[0], n_apps=sim.n_apps,
+        n_sins=sim.sin_amp.shape[0], n_events=sim.ev_t0.shape[0])
 
 
-def _flop_cost(shape: FleetShape) -> float:
-    """Per-tick padded-FLOP proxy: the simulator's [I, F] dataflow matmuls,
-    the [F, L] link products, and the allocator's [L, F] batched solve all
-    scale with these products (constants drop out of the waste comparison).
+def _flop_cost(shape: FleetShape, policy: str = "tcp") -> float:
+    """Per-tick per-scenario padded-FLOP proxy.
+
+    The base term covers the simulator's [I, F] dataflow matmuls and
+    [F, L] link products; the policy term covers the allocation solve
+    inside the scan:
+
+    * tcp / appfair — the fused max-min fill: (FILL_ROUNDS + 1) stacked
+      ``[2F+2, F] @ [F, L]`` GEMMs dominate at O(F²·L); tcp re-solves
+      every tick (``upd_every == 1``), which is why tcp fleets are the
+      most padding-sensitive.
+    * appaware — the allocator's sort-based fused solve plus 8 backfill
+      sweeps per controller interval. The update gate's predicate is
+      shared across the batch (the tick index is an unbatched scan
+      stream), so the ``lax.cond`` stays a real branch under vmap and the
+      per-tick cost amortizes over ``upd_every`` — the weight here is the
+      *empirical* padding sensitivity (interleaved A/B showed merged
+      covers hurting appaware nearly as much as tcp: its solve is
+      memory-traffic- rather than GEMM-bound), not a derived op count.
+    * fixed — no solve at all.
+
+    Constants only matter *relative* to ``tick_overhead`` (same units), so
+    the proxy needs the right scaling in F and L, not exact op counts.
     """
-    F, L = shape.n_flows, shape.n_links
-    return F * L + 2.0 * shape.n_insts * F + shape.n_paths * F
-
-
-def _has_sched(shape: FleetShape) -> bool:
-    return shape.n_sins > 0 or shape.n_events > 0
+    F, L, I = shape.n_flows, shape.n_links, shape.n_insts
+    base = F * L + 2.0 * I * F + 6.0 * F
+    if shape.n_sins > 0 or shape.n_events > 0:
+        # in-run schedule machinery: the [T, L] capacity stream plus the
+        # per-tick transfer enforcement (load matmul, per-flow min over
+        # links). Merging a static scenario into a scheduled bucket makes
+        # it pay this — measured ~1.5× the base tick on the seed corpus —
+        # so the planner only mixes static and scheduled shapes when
+        # overhead genuinely dominates.
+        base += 3.0 * F * L + 8.0 * L + 4.0 * shape.n_sins * L \
+            + 4.0 * shape.n_events
+    if policy in ("tcp", "appfair"):
+        base += 3.0 * 2.0 * (2.0 * F + 2.0) * F * L
+    elif policy == "appaware":
+        base += 40.0 * F * L
+    return base
 
 
 def _plan_buckets(sims: Sequence[CompiledSim], max_buckets: int,
-                  exact_apps: bool,
-                  split_sched: bool = False) -> list[tuple[list[int],
-                                                           FleetShape]]:
+                  exact_apps: bool = False, policy: str = "tcp",
+                  tick_overhead: float = 0.0) -> list[tuple[list[int],
+                                                            FleetShape]]:
     """Greedy agglomerative bucketing: start from one bucket per distinct
-    true shape, repeatedly merge the pair that adds the least padded FLOPs,
-    stop at ``max_buckets``. With ``exact_apps`` (the "appfair" policy)
-    only buckets with equal ``n_apps`` may merge — the priority grouping is
-    a function of the app count, so the app axis is never padded across
-    disagreeing scenarios (the bucket count may then exceed the budget by
-    necessity: one bucket per app count at minimum). With ``split_sched``
-    (the "fixed" policy) static and scheduled scenarios never share a
-    bucket: a static sim padded into a scheduled bucket takes the per-tick
-    capacity-enforcement path, which only matches its standalone trajectory
-    when the rate vector is link-feasible — guaranteed for the solver
-    policies but *deliberately violated* by brute-force ``x_fixed``
-    studies."""
+    true shape, repeatedly apply the cheapest merge. A merge is *forced*
+    while the bucket count exceeds ``max_buckets`` and otherwise taken
+    only when profitable — when the padded-FLOP waste it adds stays below
+    the fixed per-bucket per-tick cost it removes (``tick_overhead``, same
+    proxy-FLOP units as :func:`_flop_cost`), so cheap-tick fleets collapse
+    toward one bucket while solver-heavy fleets keep tighter buckets and
+    ``max_buckets`` acts as a cap rather than the operative knob. With
+    ``exact_apps`` (the "appfair" policy) only buckets with equal
+    ``n_apps`` may merge — the priority grouping is a function of the app
+    count, so the app axis is never padded across disagreeing scenarios
+    (the bucket count may then exceed the budget by necessity: one bucket
+    per app count at minimum)."""
     by_shape: dict[tuple, list[int]] = {}
     for i, s in enumerate(sims):
         by_shape.setdefault(dataclasses.astuple(_sim_shape(s)), []).append(i)
@@ -165,30 +230,43 @@ def _plan_buckets(sims: Sequence[CompiledSim], max_buckets: int,
     def merge_waste(a, b):
         (ia, sa), (ib, sb) = a, b
         cover = sa.merge(sb)
-        return ((len(ia) + len(ib)) * _flop_cost(cover)
-                - len(ia) * _flop_cost(sa) - len(ib) * _flop_cost(sb))
+        return ((len(ia) + len(ib)) * _flop_cost(cover, policy)
+                - len(ia) * _flop_cost(sa, policy)
+                - len(ib) * _flop_cost(sb, policy))
 
-    while len(buckets) > max_buckets:
+    while len(buckets) > 1:
         best = None
         for j in range(len(buckets)):
             for k in range(j + 1, len(buckets)):
                 if exact_apps and (buckets[j][1].n_apps
                                    != buckets[k][1].n_apps):
                     continue
-                if split_sched and (_has_sched(buckets[j][1])
-                                    != _has_sched(buckets[k][1])):
-                    continue
                 w = merge_waste(buckets[j], buckets[k])
                 if best is None or w < best[0]:
                     best = (w, j, k)
         if best is None:  # no feasible merge (exact_apps partitions)
             break
+        if len(buckets) <= max_buckets and best[0] >= tick_overhead:
+            break  # within budget and no merge pays for itself
         _, j, k = best
         (ij, sj), (ik, sk) = buckets[j], buckets[k]
         merged = (ij + ik, sj.merge(sk))
         buckets = [b for i, b in enumerate(buckets) if i not in (j, k)]
         buckets.append(merged)
     return buckets
+
+
+def _round_rows(n: int, n_dev: int) -> int:
+    """Padded batch-row capacity for a bucket of ``n`` scenarios: rounded
+    up to the device count (so the scenario axis always shards evenly) and,
+    for fleets large enough that a few inert rows are noise (≥ 16), to a
+    small quantum — growth headroom, so a fleet that only gains scenarios
+    within the padded capacity reuses its compiled executable."""
+    n = -(-n // max(n_dev, 1)) * max(n_dev, 1)
+    if n >= 16:
+        q = 4 * max(n_dev, 1) // math.gcd(4, max(n_dev, 1))
+        n = -(-n // q) * q
+    return n
 
 
 # padding/stacking run in numpy: hundreds of tiny jnp.pad dispatches would
@@ -216,7 +294,7 @@ def pad_sim(sim: CompiledSim, shape: FleetShape,
     scenario (``FleetRunner`` does) for throughput conversion.
     """
     F, L = shape.n_flows, shape.n_links
-    I, P, A = shape.n_insts, shape.n_paths, shape.n_apps
+    I, A = shape.n_insts, shape.n_apps
     S, E = shape.n_sins, shape.n_events
     if sim.n_apps > A:
         raise ValueError(f"cannot pad n_apps {sim.n_apps} down to {A}")
@@ -239,7 +317,7 @@ def pad_sim(sim: CompiledSim, shape: FleetShape,
         dst_of_flow=_pad1(sim.dst_of_flow, F, 0),
         src_of_flow=_pad1(sim.src_of_flow, F, 0),
         w_of_flow=_pad1(sim.w_of_flow, F),
-        paths=_pad2(sim.paths, P, F),
+        path_w=_pad1(sim.path_w, F),
         tuples_per_mb=(sim.tuples_per_mb if tuples_per_mb is None
                        else float(tuples_per_mb)),
         app_of_flow=_pad1(sim.app_of_flow, F, 0),
@@ -269,7 +347,12 @@ def stack_sims(
     return stacked, shape
 
 
-# field -> (padded-dim axes, pad value); dims keyed into {F, L, I, P}
+# field -> (padded-dim axes, pad value); dims keyed into {F, L, I, S, E}.
+# A staging row never slice-assigned from a real scenario keeps exactly
+# these pad values — which makes it an *inert scenario*: zero generation
+# and demand, huge-capacity INTERNAL links no solver binds on, never-
+# active events. Spare capacity rows are therefore harmless to run and
+# their outputs are dropped on return.
 _FIELD_SPECS: dict[str, tuple[tuple[str, ...], float]] = {
     "R": (("F", "L"), 0.0),
     "caps": (("L",), _PAD_CAP),
@@ -288,7 +371,7 @@ _FIELD_SPECS: dict[str, tuple[tuple[str, ...], float]] = {
     "dst_of_flow": (("F",), 0),
     "src_of_flow": (("F",), 0),
     "w_of_flow": (("F",), 0.0),
-    "paths": (("P", "F"), 0.0),
+    "path_w": (("F",), 0.0),
     "app_of_flow": (("F",), 0),
     "app_of_inst": (("I",), 0),
     "sin_amp": (("S", "L"), 0.0),
@@ -301,76 +384,27 @@ _FIELD_SPECS: dict[str, tuple[tuple[str, ...], float]] = {
 }
 
 
-def _run_fleet_impl(stacked, xf, qcap, *, policy, n_ticks, dt, upd_every,
-                    alpha, n_groups, solver):
-    def one(sim, x):
-        return _run(sim, policy, n_ticks, dt, upd_every, x_fixed=x,
-                    alpha=alpha, n_groups=n_groups, qcap=qcap, solver=solver)
-
-    if xf is None:
-        return jax.vmap(lambda s: one(s, None))(stacked)
-    return jax.vmap(one)(stacked, xf)
-
-
-# one jitted executable per (device count, policy, solver, n_ticks,
-# upd_every, dt, alpha, n_groups) key; XLA's jit cache then adds the bucket
-# shape axis. Kept in a dict (not lru_cache) so cache occupancy is
-# introspectable for no-recompile assertions.
-_EXECUTABLES: dict[tuple, "jax.stages.Wrapped"] = {}
-
-
-def _fleet_executable(n_shards: int, policy: str, n_ticks: int, dt: float,
-                      upd_every: int, alpha: float, n_groups: int,
-                      solver: str):
-    """Build (and cache) the jitted fleet entry point.
-
-    With ``n_shards`` > 1 the batch axis is split across local devices as
-    **plain SPMD sharding** (``jit`` + ``in_shardings`` on the scenario
-    axis). Earlier revisions wrapped the body in ``shard_map`` so the
-    data-dependent ``while_loop``s inside the policies (the max-min
-    progressive filling) kept device-local trip counts — a plain
-    SPMD-sharded batch axis paid a cross-device all-reduce on every loop
-    predicate. The fused fixed-trip max-min solver
-    (:func:`repro.core.tcp.maxmin_fused`) removed the last data-dependent
-    control flow from every policy, so the partitioner now sees a purely
-    batch-parallel program and the ``shard_map`` staging (and its
-    ``check_rep=False`` escape hatch) is unnecessary. The stacked batch
-    (and x_fixed) buffers are donated on dispatch: XLA may reuse their
-    memory for the trajectory outputs on the warm path; the runner's numpy
-    staging buffers remain the host-side copy and are re-pushed on the
-    next call.
-    """
-    key = (n_shards, policy, n_ticks, dt, upd_every, alpha, n_groups, solver)
-    fn = _EXECUTABLES.get(key)
-    if fn is not None:
-        return fn
-
-    def impl(stacked, xf, qcap):
-        return _run_fleet_impl(
-            stacked, xf, qcap, policy=policy, n_ticks=n_ticks, dt=dt,
-            upd_every=upd_every, alpha=alpha, n_groups=n_groups,
-            solver=solver)
-
-    if n_shards > 1:
-        mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("scenarios",))
-        batch = NamedSharding(mesh, PartitionSpec("scenarios"))
-        rep = NamedSharding(mesh, PartitionSpec())
-        fn = jax.jit(impl, in_shardings=(batch, batch, rep),
-                     donate_argnums=(0, 1))
-    else:
-        fn = jax.jit(impl, donate_argnums=(0, 1))
-    _EXECUTABLES[key] = fn
-    return fn
-
-
 class FleetRunner:
-    """Persistent bucketed fleet executor (see module docstring).
+    """Persistent packed-fleet executor (see module docstring).
 
-    One runner amortizes three caches across calls: the XLA executable per
-    ``(bucket shape, policy, solver, n_ticks, upd_every, dt)`` key (held by
-    the module-level jitted entry point), the numpy staging buffers per
-    ``(bucket shape, batch size)``, and the bucket plan per fleet shape
-    multiset. ``simulate_many`` routes through one module-level instance.
+    One runner amortizes three caches across calls — all held *per
+    instance*, so two runners (e.g. with different ``max_buckets`` or
+    planner constants) can never poison each other's entries or
+    no-recompile assertions:
+
+    * the jitted executable per (pack signature, policy, solver, n_ticks,
+      upd_every, dt, device count) key (``compile_cache_size`` exposes the
+      XLA cache-miss count across them),
+    * the numpy staging buffers per (bucket shape, members, rows),
+    * the bucket plan per (fleet shape multiset, policy).
+
+    ``fused=True`` (default) runs every bucket of a plan inside one jitted
+    executable: a warm fleet run is exactly ONE kernel dispatch.
+    ``fused=False`` dispatches each bucket as its own executable — the
+    per-bucket parity oracle (and the mode the ``fleet_dispatch_floor``
+    bench uses to measure per-dispatch overhead). ``simulate_many`` routes
+    through one module-level instance. ``last_stats`` reports the dispatch
+    count, bucket structure, and padded row counts of the latest run.
     """
 
     # staging entries kept before the oldest are evicted: each holds one
@@ -378,48 +412,78 @@ class FleetRunner:
     # for the life of the process across a many-shaped sweep
     MAX_STAGED = 32
 
-    def __init__(self, max_buckets: int = 4):
+    def __init__(self, max_buckets: int = 4, fused: bool = True,
+                 tick_overhead: float | None = None):
         self.max_buckets = int(max_buckets)
+        self.fused = bool(fused)
+        self.tick_overhead = (_default_tick_overhead()
+                              if tick_overhead is None
+                              else float(tick_overhead))
         self._staging: dict[tuple, dict[str, np.ndarray]] = {}
         self._stacked: dict[tuple, CompiledSim] = {}
-        self._filled: dict[tuple, list] = {}  # bucket key -> sim weakrefs
+        self._device: dict[tuple, CompiledSim] = {}  # device-resident packs
+        self._filled: dict[tuple, list] = {}  # staging key -> sim weakrefs
         self._plan_cache: dict[tuple, list[tuple[list[int], FleetShape]]] = {}
+        self._executables: dict[tuple, "jax.stages.Wrapped"] = {}
+        self._shardings: dict[int, tuple] = {}
+        self.last_stats: dict = {}
 
     # ---------------------------------------------------------- planning
-    def plan(self, sims: Sequence[CompiledSim], exact_apps: bool = False,
-             split_sched: bool = False) -> list[tuple[list[int], FleetShape]]:
+    def plan(self, sims: Sequence[CompiledSim],
+             policy: str = "tcp") -> list[tuple[list[int], FleetShape]]:
         """Bucket assignment for a fleet: list of (scenario indices, padded
-        bucket shape). Cached per shape multiset."""
+        bucket shape). Cached per (shape multiset, policy) — the FLOP model
+        is policy-aware."""
         key = (tuple(dataclasses.astuple(_sim_shape(s)) for s in sims),
-               exact_apps, split_sched, self.max_buckets)
+               policy)
         plan = self._plan_cache.get(key)
         if plan is None:
-            plan = _plan_buckets(sims, self.max_buckets, exact_apps,
-                                 split_sched)
+            plan = _plan_buckets(sims, self.max_buckets,
+                                 exact_apps=(policy == "appfair"),
+                                 policy=policy,
+                                 tick_overhead=self.tick_overhead)
             self._plan_cache[key] = plan
         return plan
 
+    def _sharding(self, n_shards: int):
+        """(batch, replicated) shardings for the scenario axis, or (None,
+        None) single-device."""
+        if n_shards <= 1:
+            return None, None
+        cached = self._shardings.get(n_shards)
+        if cached is None:
+            mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("scenarios",))
+            cached = (NamedSharding(mesh, PartitionSpec("scenarios")),
+                      NamedSharding(mesh, PartitionSpec()))
+            self._shardings[n_shards] = cached
+        return cached
+
     # ----------------------------------------------------------- staging
     def _stack_bucket(self, sims: list[CompiledSim], shape: FleetShape,
-                      idxs: list[int]) -> CompiledSim:
-        """Stack a bucket into preallocated numpy staging buffers (reset +
-        slice-assign; no per-sim np.pad allocations on repeat calls). When
-        the bucket holds the *same scenario objects* as the previous call
-        (the steady state of a repeat study) the filled buffers are reused
-        outright — the warm path re-stacks nothing. The key includes the
-        bucket's member indices: two buckets of one fleet can share a
-        padded shape and batch size, and a shape-only key would make them
-        overwrite each other's staging every call (silently losing the
-        warm-path reuse for both)."""
+                      idxs: list[int], rows: int) -> tuple[CompiledSim,
+                                                           tuple, bool]:
+        """Stack a bucket into preallocated numpy staging buffers of
+        ``rows`` ≥ len(sims) batch rows (reset + slice-assign; no per-sim
+        np.pad allocations on repeat calls). Spare rows keep their pad
+        values — inert scenarios, dropped on return. When the bucket holds
+        the *same scenario objects* as the previous call (the steady state
+        of a repeat study) the filled buffers are reused outright — the
+        warm path re-stacks nothing. The key includes the bucket's member
+        indices: two buckets of one fleet can share a padded shape and
+        batch size, and a shape-only key would make them overwrite each
+        other's staging every call (silently losing the warm-path reuse
+        for both). Returns (stacked numpy pack, staging key, freshly
+        staged) — the caller keys its device-resident copy on the same
+        staging key and refreshes it only when the numpy side changed."""
         B = len(sims)
-        key = (dataclasses.astuple(shape), tuple(idxs))
+        key = (dataclasses.astuple(shape), tuple(idxs), rows)
         refs = self._filled.get(key)
         if refs is not None and len(refs) == B and all(
                 r() is s for r, s in zip(refs, sims)):
             # LRU touch: move the hit key to the back so steady repeat
             # studies never lose their staging to a sweep's churn
             self._staging[key] = self._staging.pop(key)
-            return self._stacked[key]
+            return self._stacked[key], key, False
         # bounded cache: drop the oldest staged buckets (and any whose sims
         # were garbage-collected) before staging a new one
         dead = [k for k, rs in self._filled.items()
@@ -433,14 +497,18 @@ class FleetRunner:
                 self._staging.pop(k, None)
                 self._stacked.pop(k, None)
                 self._filled.pop(k, None)
+        # restaging mutates the numpy buffers in place: every device copy
+        # of this key (any n_shards variant) and of evicted keys is stale
+        for dk in [d for d in self._device if d[0] == key or d[0] in evict]:
+            self._device.pop(dk, None)
         bufs = self._staging.setdefault(key, {})
         dims = {"F": shape.n_flows, "L": shape.n_links,
-                "I": shape.n_insts, "P": shape.n_paths,
+                "I": shape.n_insts,
                 "S": shape.n_sins, "E": shape.n_events}
         leaves = {}
         for field, (axes, pad) in _FIELD_SPECS.items():
             first = np.asarray(getattr(sims[0], field))
-            full = (B,) + tuple(dims[a] for a in axes)
+            full = (rows,) + tuple(dims[a] for a in axes)
             buf = bufs.get(field)
             if buf is None or buf.shape != full or buf.dtype != first.dtype:
                 buf = np.empty(full, first.dtype)
@@ -454,7 +522,62 @@ class FleetRunner:
                               **leaves)
         self._stacked[key] = stacked
         self._filled[key] = [weakref.ref(s) for s in sims]
-        return stacked
+        return stacked, key, True
+
+    # --------------------------------------------------------- executable
+    def _executable(self, key, n_shards: int, policy: str,
+                    n_ticks: int, dt: float, upd_every: int, alpha: float,
+                    n_groups: int, solver: str):
+        """Build (and cache) the jitted entry point for one pack of
+        ``n_buckets`` buckets.
+
+        The executable takes ``(packs, xfs, enfs, qcap)`` — tuples with one
+        entry per bucket — and runs each bucket's vmap-over-scan *inside
+        the same XLA program*, so one call is one kernel dispatch whatever
+        the internal bucket structure. Each bucket keeps its own scan: a
+        single scan over the tuple of bucket carries measured slower on
+        CPU *and* lost bitwise parity with per-bucket dispatch (XLA fuses
+        ops across the bucket bodies, re-associating reductions), while
+        per-bucket scans inside one program are bitwise-identical to
+        separate executables.
+
+        With ``n_shards`` > 1 every bucket's scenario axis is split across
+        local devices as plain SPMD sharding (``jit`` + ``in_shardings``;
+        the fused fixed-trip max-min solver left no data-dependent control
+        flow, see PR 4 — ``shard_map`` is unnecessary). The stacked packs
+        arrive pre-placed under the same shardings and are *not* donated:
+        the runner re-passes the identical device buffers on every warm
+        call, so the steady state pays zero H2D transfer — donation would
+        consume them (see module docstring).
+        """
+        fn = self._executables.get(key)
+        if fn is not None:
+            return fn
+
+        def one(sim, xf, enf, q):
+            return _run(sim, policy, n_ticks, dt, upd_every, x_fixed=xf,
+                        alpha=alpha, n_groups=n_groups, qcap=q,
+                        solver=solver, enforce=enf)
+
+        def impl(packs, xfs, enfs, qcap):
+            outs = []
+            for stacked, xf, enf in zip(packs, xfs, enfs):
+                if xf is None:
+                    outs.append(jax.vmap(
+                        lambda s, e, q: one(s, None, e, q),
+                        in_axes=(0, 0, None))(stacked, enf, qcap))
+                else:
+                    outs.append(jax.vmap(one, in_axes=(0, 0, 0, None))(
+                        stacked, xf, enf, qcap))
+            return tuple(outs)
+
+        batch, rep = self._sharding(n_shards)
+        if batch is not None:
+            fn = jax.jit(impl, in_shardings=(batch, batch, batch, rep))
+        else:
+            fn = jax.jit(impl)
+        self._executables[key] = fn
+        return fn
 
     # ------------------------------------------------------------ running
     def run(
@@ -471,16 +594,16 @@ class FleetRunner:
         solver: str = "sort",
         shard: bool = True,
     ) -> list[SimResult]:
-        """Run the whole fleet bucket-by-bucket; one :class:`SimResult` per
+        """Run the whole fleet as one fused executable (``fused=True``) or
+        bucket-by-bucket (``fused=False``); one :class:`SimResult` per
         scenario (input order), each sliced back to its true [L]/[A]
         shapes — element-wise equal to ``simulate(sims[b], ...)`` for every
         policy (appfair buckets by exact app count).
 
         With >1 local device (e.g. ``--xla_force_host_platform_device_count``
         on CPU, or a TPU slice) and ``shard=True``, each bucket's scenario
-        axis is sharded across devices: the bucket is padded with replicas
-        of its last scenario up to a device multiple and the extras are
-        dropped on return.
+        axis is sharded across devices (bucket rows are padded with inert
+        scenarios up to a device multiple and dropped on return).
         """
         if not sims:
             raise ValueError("empty fleet")
@@ -491,46 +614,93 @@ class FleetRunner:
         upd_every = resolve_upd_every(policy, dt, upd_every)
         n_dev = len(jax.devices()) if shard else 1
 
-        # phase 1: stage + dispatch every bucket (jax dispatch is async, so
-        # bucket k+1's host staging/transfer overlaps bucket k's compute)
-        pending = []
-        for idxs, shape in self.plan(sims,
-                                     exact_apps=(policy == "appfair"),
-                                     split_sched=(policy == "fixed")):
-            pad_b = (-len(idxs)) % n_dev if n_dev > 1 else 0
-            run_idxs = idxs + [idxs[-1]] * pad_b
-            n_shards = n_dev if (n_dev > 1 and len(run_idxs) % n_dev == 0
-                                 ) else 1
-            stacked = self._stack_bucket([sims[i] for i in run_idxs], shape,
-                                         run_idxs)
-            xf = None
-            if x_fixed is not None:
-                xf = np.stack([
-                    _pad1(np.asarray(x_fixed[i], np.float32), shape.n_flows)
-                    for i in run_idxs])
-            fn = _fleet_executable(n_shards, policy, n_ticks, dt, upd_every,
-                                   alpha, n_groups, solver)
-            with warnings.catch_warnings():
-                # donation is best-effort: int/bool structure leaves can't
-                # back the float trajectory outputs and XLA says so per call
-                warnings.filterwarnings(
-                    "ignore", message="Some donated buffers were not usable")
-                ys = fn(stacked, xf, jnp.float32(qcap))
-            pending.append((idxs, ys))
+        plan = self.plan(sims, policy)
+        row_counts = [_round_rows(len(idxs), n_dev) for idxs, _ in plan]
+        n_shards = n_dev if (n_dev > 1
+                             and all(r % n_dev == 0 for r in row_counts)
+                             ) else 1
+        batch_sh, _ = self._sharding(n_shards)
+        packs, xfs, enfs = [], [], []
+        for (idxs, shape), rows in zip(plan, row_counts):
+            stacked, skey, fresh = self._stack_bucket(
+                [sims[i] for i in idxs], shape, idxs, rows)
+            # device-resident pack: pushed (pre-sharded) once per staging,
+            # re-passed verbatim on warm calls — zero per-call transfer
+            # (restaging purges every device variant of the key)
+            dkey = (skey, n_shards)
+            dev = self._device.get(dkey)
+            if dev is None:
+                dev = (jax.device_put(stacked, batch_sh)
+                       if batch_sh is not None else
+                       jax.tree_util.tree_map(jnp.asarray, stacked))
+                self._device[dkey] = dev
+            packs.append(dev)
+            if x_fixed is None:
+                xfs.append(None)
+            else:
+                # rebuilt (and re-transferred) per call on purpose: the
+                # staging fingerprint covers scenario identity, not the
+                # x_fixed *values*, so caching these on the staging key
+                # would serve stale rate vectors across sweeps
+                xf = np.zeros((rows, shape.n_flows), np.float32)
+                for b, i in enumerate(idxs):
+                    xf[b, :len(x_fixed[i])] = np.asarray(x_fixed[i],
+                                                         np.float32)
+                xfs.append(xf)
+            # per-scenario capacity-enforcement gate: scheduled scenarios
+            # enforce caps(t) per tick; static (and inert spare) rows keep
+            # exact static semantics even inside a scheduled bucket
+            enf = np.zeros(rows, bool)
+            for b, i in enumerate(idxs):
+                enf[b] = sims[i].is_dynamic
+            enfs.append(enf)
+        pack_sig = tuple((dataclasses.astuple(shape), rows)
+                         for (_, shape), rows in zip(plan, row_counts))
+        base_key = (policy, n_ticks, dt, upd_every, alpha, n_groups, solver,
+                    n_shards, x_fixed is not None)
 
-        # phase 2: collect (first np.asarray per bucket blocks on its result)
+        if self.fused:
+            fn = self._executable(
+                base_key + (pack_sig,), n_shards, policy,
+                n_ticks, dt, upd_every, alpha, n_groups, solver)
+            outs = fn(tuple(packs), tuple(xfs), tuple(enfs),
+                      jnp.float32(qcap))
+            n_dispatches = 1
+        else:
+            # per-bucket oracle: one executable (and one dispatch) per
+            # bucket; jax dispatch is async, so bucket k+1's staging
+            # overlaps bucket k's compute
+            outs = []
+            for pack, xf, enf, sig in zip(packs, xfs, enfs, pack_sig):
+                fn = self._executable(
+                    base_key + (sig,), n_shards, policy, n_ticks,
+                    dt, upd_every, alpha, n_groups, solver)
+                outs.append(fn((pack,), (xf,), (enf,),
+                               jnp.float32(qcap))[0])
+            n_dispatches = len(plan)
+
+        self.last_stats = {
+            "n_dispatches": n_dispatches,
+            "n_buckets": len(plan),
+            "n_scenarios": len(sims),
+            "rows": row_counts,
+            "bucket_shapes": [dataclasses.astuple(s) for _, s in plan],
+            "policy": policy,
+        }
+
         out: list[SimResult | None] = [None] * len(sims)
-        for idxs, (sink, sink_app, lat, load, caps_sched) in pending:
-            sink, sink_app = np.asarray(sink), np.asarray(sink_app)
-            lat, load = np.asarray(lat), np.asarray(load)
-            caps_sched = np.asarray(caps_sched)
+        for (idxs, _), ys in zip(plan, outs):
+            sink, sink_app, wait, load, caps_sched = map(np.asarray, ys)
             for b, i in enumerate(idxs):
                 sim = sims[i]
+                F = sim.R.shape[0]
                 L, A = sim.caps.shape[0], sim.n_apps
                 out[i] = SimResult(
                     sink_mb=sink[b],
                     sink_mb_app=sink_app[b][:, :A],
-                    latency=lat[b],
+                    # path-mean latency on the true [F] slice: bitwise-
+                    # independent of bucket padding and pack structure
+                    latency=wait[b][:, :F] @ np.asarray(sim.path_w),
                     link_load=load[b][:, :L],
                     caps=np.asarray(sim.caps),
                     kinds=np.asarray(sim.kinds),
@@ -541,13 +711,13 @@ class FleetRunner:
         return out  # type: ignore[return-value]
 
     # ------------------------------------------------------ introspection
-    @staticmethod
-    def compile_cache_size() -> int:
-        """Number of compiled executables held by the fleet entry points —
-        one per (bucket shape, policy, solver, n_ticks, upd_every, dt,
-        device count) key. Flat across repeat calls ⇒ the warm path
-        recompiled nothing."""
-        return sum(fn._cache_size() for fn in _EXECUTABLES.values())
+    def compile_cache_size(self) -> int:
+        """Number of compiled executables held by *this runner's* entry
+        points — one per (pack signature, policy, solver, n_ticks,
+        upd_every, dt, device count) key. Flat across repeat calls ⇒ the
+        warm path recompiled nothing. Per-instance by construction:
+        another runner's compilations can't leak into this count."""
+        return sum(fn._cache_size() for fn in self._executables.values())
 
 
 _DEFAULT_RUNNER: FleetRunner | None = None
@@ -574,7 +744,7 @@ def simulate_many(
     shard: bool = True,
 ) -> list[SimResult]:
     """Thin wrapper over a module-level :class:`FleetRunner` (PR 1 API):
-    bucketed, compile-cached batched execution; see
+    packed single-dispatch batched execution; see
     :meth:`FleetRunner.run`."""
     return _default_runner().run(
         sims, policy=policy, seconds=seconds, dt=dt, upd_every=upd_every,

@@ -232,3 +232,13 @@ def seed_fleet(seed: int = 0) -> list[Scenario]:
         + time_varying_sweep(n_phases=2, seed=seed,
                              in_run=True)                    # 2
     )
+
+
+def bench_fleet(seed: int = 0, n_random: int = 16) -> list[Scenario]:
+    """The canonical 44-scenario benchmark corpus: :func:`seed_fleet` plus
+    ``n_random`` extra random DAGs (fixed generator seed 42, matching the
+    historical ``benchmarks/fleet.py`` setup). This is the corpus the
+    ``BENCH_fleet.json`` numbers, the CI perf gate, and the
+    packed-vs-per-bucket bitwise parity suite all run on — one definition,
+    so a bench regression and a parity failure point at the same fleet."""
+    return seed_fleet(seed=seed) + random_scenarios(n_random, seed=42)

@@ -64,7 +64,7 @@ _LAT_CAP = 1e4       # s: cap on per-flow latency contribution (stalled flows)
         "R", "caps", "kinds", "has_links", "M_in", "w_out", "p_in",
         "proc_rate", "selectivity", "gen_rate", "is_join", "is_sink",
         "join_dst", "droppable", "dst_of_flow", "src_of_flow", "w_of_flow",
-        "paths", "app_of_flow", "app_of_inst",
+        "path_w", "app_of_flow", "app_of_inst",
         "sin_amp", "sin_omega", "sin_phase",
         "ev_t0", "ev_t1", "ev_link", "ev_scale",
     ),
@@ -93,8 +93,11 @@ class CompiledSim:
     src_of_flow: Any     # [F]
     w_of_flow: Any       # [F] = w_out[src_of_flow[f], f] (the column's only
                          #      nonzero: each flow has one source instance)
-    paths: Any           # [P, F], rows pre-scaled by 1/P (Σ of path waits
-                         #         = mean latency; zero rows are neutral)
+    path_w: Any          # [F] per-flow latency weight = Σ_p paths[p, f]/P
+                         #     (the path-mean contraction, pre-collapsed so
+                         #     the scan never carries a [P, F] matvec; the
+                         #     latency itself is a host-side dot — see
+                         #     SimResult construction)
     tuples_per_mb: float
     app_of_flow: Any     # [F] int
     app_of_inst: Any     # [I] int
@@ -166,10 +169,14 @@ def compile_sim(
         if s > 0:
             p_in[sel] /= s
     droppable = np.array([edges[e].droppable for e in graph.edge_of_flow])
-    # pre-scale path masks by 1/P: the latency estimate becomes a plain sum,
-    # which stays correct when `fleet.pad_sim` appends all-zero path rows
+    # collapse the [P, F] path masks to one per-flow weight vector: the
+    # latency estimate is linear in the per-flow waits (Σ_p Σ_f paths[p, f]
+    # · wait[f] / P), so the path axis contracts at compile time — the scan
+    # outputs raw waits and the SimResult takes the dot on the host, which
+    # keeps the estimate bitwise-independent of fleet padding (an XLA
+    # matvec re-associates when the contraction length changes)
     paths = source_sink_paths(graph)
-    paths = paths / max(paths.shape[0], 1)
+    path_w = paths.sum(0) / max(paths.shape[0], 1)
     app_of_inst = (
         np.zeros(graph.n_instances, np.int32) if app_of_inst is None else app_of_inst
     )
@@ -207,7 +214,7 @@ def compile_sim(
         src_of_flow=jnp.asarray(graph.src_of_flow),
         w_of_flow=f32(graph.w_out[graph.src_of_flow,
                                   np.arange(graph.n_flows)]),
-        paths=f32(paths),
+        path_w=f32(path_w),
         tuples_per_mb=float(graph.app.tuples_per_mb),
         app_of_flow=jnp.asarray(app_of_inst[graph.dst_of_flow], jnp.int32),
         app_of_inst=jnp.asarray(app_of_inst, jnp.int32),
@@ -253,7 +260,7 @@ def _caps_over(sim: CompiledSim, ts: jnp.ndarray) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 # one simulation tick (shared by all policies)
 # --------------------------------------------------------------------------
-def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap, caps_t=None):
+def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap, caps_t=None, enforce=True):
     """One fluid step against the *current* link capacities ``caps_t``.
 
     Fused dispatch chain: ``M_in`` and ``w_out`` have exactly one nonzero
@@ -265,13 +272,22 @@ def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap, caps_t=None):
     matmuls / masked reductions on purpose: under the fleet engine's vmap
     they lower to batched GEMMs and reduces, where segment/scatter forms
     would serialize on CPU backends.
+
+    ``enforce`` gates the per-tick capacity enforcement *per scenario*
+    (a python bool for standalone sims, a traced scalar under the fleet
+    vmap): a genuinely static scenario batched into a scheduled pack keeps
+    its exact static semantics — ``transfer = desired · 1.0``, bitwise the
+    static path — instead of taking the enforcement arm on bitwise-equal
+    but re-rounded scaled loads. This is what lets brute-force ``x_fixed``
+    studies (whose rate vectors are deliberately link-infeasible) share
+    buckets with scheduled scenarios.
     """
     dst, src = sim.dst_of_flow, sim.src_of_flow
 
     # receiver-window flow control: never overflow the receive buffer
     desired = jnp.minimum(jnp.minimum(Qs, x * dt),
                           jnp.maximum(qcap - Qr, 0.0))
-    if caps_t is None:
+    if caps_t is None or enforce is False:
         # static capacities: the policies' rate vectors are already
         # link-feasible, so the transfer needs no per-tick capacity check
         # (the pre-dynamics semantics — and cost — exactly)
@@ -288,7 +304,12 @@ def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap, caps_t=None):
                            1.0)
         fscale = jnp.min(jnp.where(sim.R > 0, lscale[None, :], jnp.inf),
                          axis=1)
-        transfer = desired * jnp.where(jnp.isfinite(fscale), fscale, 1.0)
+        fscale = jnp.where(jnp.isfinite(fscale), fscale, 1.0)
+        if enforce is not True:
+            # traced per-scenario gate: un-enforced rows multiply by
+            # exactly 1.0, which is bitwise the static transfer
+            fscale = jnp.where(enforce, fscale, 1.0)
+        transfer = desired * fscale
     Qs = Qs - transfer
     Qr = Qr + transfer
 
@@ -347,14 +368,15 @@ def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap, caps_t=None):
     drain = consume / dt                                         # [F] MB/s
 
     # --- latency estimate (per source→sink path) ----------------------
+    # raw per-flow waits only; the path-mean contraction (path_w · wait)
+    # happens host-side on the true [F] slice, so the reported latency is
+    # bitwise-identical however the fleet engine pads/packs the flow axis
     wait = jnp.minimum(
         Qs / jnp.maximum(x, _EPS) + Qr / jnp.maximum(drain, _EPS), _LAT_CAP
     )
-    path_lat = sim.paths @ wait                                  # [P]
-    latency = jnp.sum(path_lat)  # rows carry 1/P => this is the path mean
 
     link_load = transfer @ sim.R / dt                            # [L] MB/s
-    return Qs, Qr, transfer, drain, (sink_mb, sink_mb_app, latency, link_load)
+    return Qs, Qr, transfer, drain, (sink_mb, sink_mb_app, wait, link_load)
 
 
 # --------------------------------------------------------------------------
@@ -495,8 +517,14 @@ class SimResult:
 )
 def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
          upd_every: int, x_fixed=None, alpha: float = 0.5, n_groups: int = 8,
-         qcap: float = 8.0, solver: str = "sort"):
+         qcap: float = 8.0, solver: str = "sort", enforce=None):
     F = sim.R.shape[0]
+    # per-scenario capacity-enforcement gate (see _tick): standalone sims
+    # enforce whenever they carry a schedule; the fleet engine passes a
+    # traced scalar so static scenarios packed into scheduled buckets keep
+    # exact static semantics
+    if enforce is None:
+        enforce = True
     z = jnp.zeros((F,), jnp.float32)
     # shape-static gate: sims compiled without a schedule (S = 0, E = 0)
     # skip the capacity stream, the per-tick enforcement, and the [T, L]
@@ -556,8 +584,8 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
             x, v_acc, ls, lr, mu, mu_acc = jax.lax.cond(
                 do_upd, updated, kept, None)
 
-        Qs1, Qr1, transfer, drain, (sink, sink_app, lat, load) = _tick(
-            sim, Qs, Qr, x, dt, qcap, caps_t=caps_t)
+        Qs1, Qr1, transfer, drain, (sink, sink_app, wait, load) = _tick(
+            sim, Qs, Qr, x, dt, qcap, caps_t=caps_t, enforce=enforce)
         # per-policy carry pieces are gated *statically*: a policy that
         # never reads prod_rate/B/mu_acc doesn't pay their per-tick ops
         if policy == "tcp":
@@ -573,7 +601,7 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
         return (
             (Qs1, Qr1, B, x, v_acc, ls, lr, prod_rate,
              drain_ewma, mu, mu_acc),
-            (sink, sink_app, lat, load),
+            (sink, sink_app, wait, load),
         )
 
     mu0 = jnp.zeros((sim.n_apps,), jnp.float32)
@@ -613,7 +641,7 @@ def simulate(
     """Run one experiment (paper §VI: 600 s runs, Δt = 5 s allocator)."""
     n_ticks = int(round(smoke_seconds(seconds) / dt))
     upd_every = resolve_upd_every(policy, dt, upd_every)
-    sink, sink_app, lat, load, caps_sched = _run(
+    sink, sink_app, wait, load, caps_sched = _run(
         sim, policy, n_ticks, dt, upd_every,
         x_fixed=None if x_fixed is None else jnp.asarray(x_fixed, jnp.float32),
         alpha=alpha, n_groups=n_groups, qcap=qcap, solver=solver,
@@ -621,7 +649,7 @@ def simulate(
     return SimResult(
         sink_mb=np.asarray(sink),
         sink_mb_app=np.asarray(sink_app),
-        latency=np.asarray(lat),
+        latency=np.asarray(wait) @ np.asarray(sim.path_w),
         link_load=np.asarray(load),
         caps=np.asarray(sim.caps),
         kinds=np.asarray(sim.kinds),

@@ -54,13 +54,12 @@ class TestPadding:
         B = len(fleet_sims)
         assert stacked.R.shape == (B, shape.n_flows, shape.n_links)
         assert stacked.M_in.shape == (B, shape.n_insts, shape.n_flows)
-        assert stacked.paths.shape == (B, shape.n_paths, shape.n_flows)
+        assert stacked.path_w.shape == (B, shape.n_flows)
         assert stacked.n_apps == shape.n_apps
 
     def test_pad_rejects_shrinking_apps(self, fleet_sims):
         shape = FleetShape.cover(fleet_sims)
-        small = FleetShape(shape.n_flows, shape.n_links, shape.n_insts,
-                           shape.n_paths, 0)
+        small = FleetShape(shape.n_flows, shape.n_links, shape.n_insts, 0)
         with pytest.raises(ValueError, match="n_apps"):
             pad_sim(fleet_sims[0], small)
 
@@ -113,10 +112,9 @@ class TestFleetRunner:
                 for i in idxs:  # bucket shape covers every member
                     s = _sim_shape(fleet_sims[i])
                     assert all(a <= b for a, b in zip(
-                        (s.n_flows, s.n_links, s.n_insts, s.n_paths,
-                         s.n_apps),
+                        (s.n_flows, s.n_links, s.n_insts, s.n_apps),
                         (shape.n_flows, shape.n_links, shape.n_insts,
-                         shape.n_paths, shape.n_apps)))
+                         shape.n_apps)))
 
     def test_no_recompile_on_repeat_calls(self, fleet_sims):
         runner = FleetRunner()
