@@ -131,7 +131,7 @@ def _mk_maxmin(F: int, L: int, seed: int = 0):
 def run_maxmin() -> list[dict]:
     """Max-min solver micro-bench: the fused fixed-trip fill
     (`maxmin_fused`, the tcp/appfair hot path) vs the retained while-loop
-    clamp-and-resolve oracle (`demand_limited_maxmin`), single-instance
+    progressive-filling oracle (`demand_limited_maxmin`), single-instance
     and under an 8-wide `vmap` (the fleet engine's shape) — the while
     loop's data-dependent trip count runs at the batch max under vmap,
     which is exactly what the fixed-trip rewrite removes."""
@@ -167,8 +167,47 @@ def run_maxmin() -> list[dict]:
     return rows
 
 
+def run_crossover() -> list[dict]:
+    """Calibration rows for ``MAXMIN_CROSSOVER_F`` — the trace-time
+    dispatch between the rank-prefix GEMM form (O(F²·L), order-cacheable,
+    one matmul per round) and the argsort+cumsum form (O(F·L), batched
+    gathers/scans) of the fused solver's water-level evaluation. Both
+    forms are timed at a grid of flow counts straddling the constant,
+    single-instance and vmap-8 (the fleet engine's batching shape, where
+    per-member sorts serialize on CPU and the GEMM form's advantage is
+    largest). The shipped constant must sit inside the measured crossover
+    band of the vmap-8 column: the solver's only batched consumer is the
+    fleet engine."""
+    from repro.core.tcp import MAXMIN_CROSSOVER_F, maxmin_fused
+
+    grid = (32, 96, 192, 256, 384, 512)
+    if SMOKE:
+        grid = (32, 96)
+    rows = []
+    for F in grid:
+        L = max(16, F // 8)
+        R, cap, d = _mk_maxmin(F, L, seed=1)
+        Rb, capb, db = (jnp.stack([a] * 8) for a in (R, cap, d))
+        row = {"name": f"maxmin_crossover_F{F}", "n_flows": F, "n_links": L,
+               "backend": jax.default_backend(),
+               "crossover_f": MAXMIN_CROSSOVER_F}
+        for form in ("gemm", "sorted"):
+            one = jax.jit(functools.partial(maxmin_fused, form=form))
+            vm = jax.jit(jax.vmap(functools.partial(maxmin_fused, form=form),
+                                  in_axes=(0, 0, 0)))
+            row[f"{form}_us"] = round(timeit_us(
+                lambda: jax.block_until_ready(one(R, cap, d)), 20), 1)
+            row[f"{form}_vmap8_us"] = round(timeit_us(
+                lambda: jax.block_until_ready(vm(Rb, capb, db)), 20), 1)
+        row["us_per_call"] = row["gemm_vmap8_us"]
+        row["gemm_over_sorted_vmap8"] = round(
+            row["gemm_vmap8_us"] / max(row["sorted_vmap8_us"], 1e-9), 3)
+        rows.append(row)
+    return rows
+
+
 def main() -> None:
-    emit(run() + run_maxmin(), "allocator")
+    emit(run() + run_maxmin() + run_crossover(), "allocator")
 
 
 if __name__ == "__main__":

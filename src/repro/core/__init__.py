@@ -15,6 +15,8 @@ from repro.core.tcp import (  # noqa: F401
     demand_limited_maxmin,       # while-loop parity oracle
     demand_limited_maxmin_np,    # sequential numpy reference
     maxmin_fused,                # the hot-path fixed-trip solver
+    maxmin_fused_step,           # order-cached per-tick variant
+    maxmin_order_init,           # its initial scan carry
     maxmin_rates,                # while-loop parity oracle
 )
 from repro.core.multiapp import (  # noqa: F401

@@ -41,6 +41,13 @@ from repro.net.topology import LinkKind
 _EPS = 1e-9
 _INF = jnp.inf
 
+# Trace-time auto-chunk threshold for the sort solver's link axis: above
+# 2x this many links, `allocate(block_links=None)` switches to
+# `_per_link_rates_chunked` in blocks of this size (the [L, F] solver
+# intermediates stop fitting in cache well before datacenter scale).
+# Simulator topologies (L <= ~32) always stay on the single-pass form.
+ALLOC_BLOCK_LINKS = 256
+
 
 def solve_uplink(weights: jnp.ndarray, mask: jnp.ndarray, capacity) -> jnp.ndarray:
     """Eq. (3): proportional-to-demand allocation on one uplink.
@@ -303,10 +310,17 @@ def allocate(
             size (sequential ``lax.map``), capping the [L, F] solver
             intermediates — exact same results, bounded working set at
             datacenter link counts (ignored by "pallas", which tiles
-            internally).
+            internally). ``None`` (the default) dispatches at trace time
+            on the static link count: single-pass below
+            ``2 * ALLOC_BLOCK_LINKS`` links (every simulator topology —
+            the fused form's XLA program is unchanged there), chunks of
+            ``ALLOC_BLOCK_LINKS`` above it. Pass ``0`` to force the
+            single-pass form at any size.
     """
     if solver == "sort":
-        if block_links is not None:
+        if block_links is None and program.R.shape[1] > 2 * ALLOC_BLOCK_LINKS:
+            block_links = ALLOC_BLOCK_LINKS
+        if block_links:
             per_link = _per_link_rates_chunked(program, state, dt,
                                                block_links)   # [L, F]
         else:

@@ -87,6 +87,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import weakref
+import zlib
 from typing import Sequence
 
 import jax
@@ -163,6 +164,18 @@ def _sim_shape(sim: CompiledSim) -> FleetShape:
         n_sins=sim.sin_amp.shape[0], n_events=sim.ev_t0.shape[0])
 
 
+def _sim_content_sig(sim: CompiledSim) -> int:
+    """crc32 over every staged field's bytes: the content half of the
+    staging-reuse fingerprint. Object identity (the other half) cannot see
+    in-place mutation of a scenario's arrays between warm calls; the byte
+    hash can, at corpus scale in ~µs per scenario."""
+    h = 0
+    for field in _FIELD_SPECS:
+        a = np.ascontiguousarray(np.asarray(getattr(sim, field)))
+        h = zlib.crc32(a.tobytes(), h)
+    return h
+
+
 def _flop_cost(shape: FleetShape, policy: str = "tcp") -> float:
     """Per-tick per-scenario padded-FLOP proxy.
 
@@ -170,10 +183,13 @@ def _flop_cost(shape: FleetShape, policy: str = "tcp") -> float:
     [F, L] link products; the policy term covers the allocation solve
     inside the scan:
 
-    * tcp / appfair — the fused max-min fill: (FILL_ROUNDS + 1) stacked
-      ``[2F+2, F] @ [F, L]`` GEMMs dominate at O(F²·L); tcp re-solves
-      every tick (``upd_every == 1``), which is why tcp fleets are the
-      most padding-sensitive.
+    * tcp / appfair — the fused max-min fill: (FILL_ROUNDS + 1)
+      ``[F+1, F] @ [F, 2L]`` rank-prefix GEMMs against the order-only
+      operand dominate at O(F²·L); tcp re-solves every tick
+      (``upd_every == 1``), which is why tcp fleets are the most
+      padding-sensitive. (Numerically identical to the pre-order-cache
+      stacked ``[2F+2, F] @ [F, L]`` weight — 2·(F+1)·2L = 2·(2F+2)·L —
+      so plans and bucket shapes are unchanged across that refactor.)
     * appaware — the allocator's sort-based fused solve plus 8 backfill
       sweeps per controller interval. The update gate's predicate is
       shared across the batch (the tick index is an unbatched scan
@@ -199,7 +215,7 @@ def _flop_cost(shape: FleetShape, policy: str = "tcp") -> float:
         base += 3.0 * F * L + 8.0 * L + 4.0 * shape.n_sins * L \
             + 4.0 * shape.n_events
     if policy in ("tcp", "appfair"):
-        base += 3.0 * 2.0 * (2.0 * F + 2.0) * F * L
+        base += 3.0 * 2.0 * (F + 1.0) * F * 2.0 * L
     elif policy == "appaware":
         base += 40.0 * F * L
     return base
@@ -466,9 +482,9 @@ class FleetRunner:
         ``rows`` ≥ len(sims) batch rows (reset + slice-assign; no per-sim
         np.pad allocations on repeat calls). Spare rows keep their pad
         values — inert scenarios, dropped on return. When the bucket holds
-        the *same scenario objects* as the previous call (the steady state
-        of a repeat study) the filled buffers are reused outright — the
-        warm path re-stacks nothing. The key includes the bucket's member
+        the *same scenario objects with the same field bytes* as the
+        previous call (the steady state of a repeat study) the filled
+        buffers are reused outright — the warm path re-stacks nothing. The key includes the bucket's member
         indices: two buckets of one fleet can share a padded shape and
         batch size, and a shape-only key would make them overwrite each
         other's staging every call (silently losing the warm-path reuse
@@ -477,16 +493,27 @@ class FleetRunner:
         staging key and refreshes it only when the numpy side changed."""
         B = len(sims)
         key = (dataclasses.astuple(shape), tuple(idxs), rows)
-        refs = self._filled.get(key)
-        if refs is not None and len(refs) == B and all(
-                r() is s for r, s in zip(refs, sims)):
-            # LRU touch: move the hit key to the back so steady repeat
-            # studies never lose their staging to a sweep's churn
-            self._staging[key] = self._staging.pop(key)
-            return self._stacked[key], key, False
+        entry = self._filled.get(key)
+        # reuse requires the same scenario OBJECTS *and* the same field
+        # bytes: object identity alone is unsound — callers may legally
+        # mutate a scenario's arrays in place between warm calls
+        # (dataclasses are not frozen deep), and serving the previous
+        # staging would silently replay the pre-mutation fleet. The
+        # content signature (crc32 over every staged field) catches that;
+        # corpus-scale scenarios hash in microseconds, far below one
+        # restage.
+        if entry is not None:
+            refs, sigs = entry
+            if len(refs) == B and all(
+                    r() is s for r, s in zip(refs, sims)) and all(
+                    g == _sim_content_sig(s) for g, s in zip(sigs, sims)):
+                # LRU touch: move the hit key to the back so steady repeat
+                # studies never lose their staging to a sweep's churn
+                self._staging[key] = self._staging.pop(key)
+                return self._stacked[key], key, False
         # bounded cache: drop the oldest staged buckets (and any whose sims
         # were garbage-collected) before staging a new one
-        dead = [k for k, rs in self._filled.items()
+        dead = [k for k, (rs, _) in self._filled.items()
                 if any(r() is None for r in rs)]
         evict = dead + [k for k in self._staging
                         if k not in dead][:max(
@@ -521,7 +548,8 @@ class FleetRunner:
         stacked = CompiledSim(tuples_per_mb=1.0, n_apps=shape.n_apps,
                               **leaves)
         self._stacked[key] = stacked
-        self._filled[key] = [weakref.ref(s) for s in sims]
+        self._filled[key] = ([weakref.ref(s) for s in sims],
+                             [_sim_content_sig(s) for s in sims])
         return stacked, key, True
 
     # --------------------------------------------------------- executable
@@ -689,8 +717,10 @@ class FleetRunner:
         }
 
         out: list[SimResult | None] = [None] * len(sims)
+        total_rebuilds = 0
         for (idxs, _), ys in zip(plan, outs):
-            sink, sink_app, wait, load, caps_sched = map(np.asarray, ys)
+            sink, sink_app, wait, load, rebuilds, caps_sched = map(
+                np.asarray, ys)
             for b, i in enumerate(idxs):
                 sim = sims[i]
                 F = sim.R.shape[0]
@@ -707,7 +737,10 @@ class FleetRunner:
                     tuples_per_mb=sim.tuples_per_mb,
                     dt=dt,
                     caps_t=caps_sched[b][:, :L] if sim.is_dynamic else None,
+                    order_rebuilds=rebuilds[b],
                 )
+                total_rebuilds += int(rebuilds[b].sum())
+        self.last_stats["order_rebuilds"] = total_rebuilds
         return out  # type: ignore[return-value]
 
     # ------------------------------------------------------ introspection

@@ -48,7 +48,7 @@ from repro.core.multiapp import (
     group_by_throughput,
     strict_priority_alloc,
 )
-from repro.core.tcp import maxmin_fused
+from repro.core.tcp import maxmin_fused_step, maxmin_order_init
 from repro.net.topology import LinkSchedule, Topology
 from repro.streams.app import InstanceGraph, source_sink_paths
 
@@ -383,7 +383,7 @@ def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap, caps_t=None, enforce=True):
 # policies
 # --------------------------------------------------------------------------
 def _tcp_rates(sim: CompiledSim, caps_t, Qs, Qr, prod_rate, drain_ewma,
-               dt, qcap):
+               dt, qcap, order_carry):
     # sender-side demand, clamped by the receiver window (rwnd): a flow whose
     # receive buffer is full only demands its drain rate — real TCP frees the
     # bottleneck for other flows exactly this way.
@@ -392,9 +392,15 @@ def _tcp_rates(sim: CompiledSim, caps_t, Qs, Qr, prod_rate, drain_ewma,
     demand = jnp.minimum(send, rwnd)
     # fused fixed-trip max-min (demand caps folded into the fill): no
     # lax.while_loop in the per-tick hot path, so the policy batches under
-    # vmap/SPMD exactly like appaware's allocator does
-    x = maxmin_fused(sim.R, caps_t, demand)
-    return jnp.where(sim.has_links, jnp.minimum(x, demand), INTERNAL_RATE)
+    # vmap/SPMD exactly like appaware's allocator does. The demand-order
+    # operand rides the scan carry (``order_carry``): adjacent ticks rarely
+    # reorder the demand vector, so the solver only rebuilds its rank
+    # machinery on an actual order change — bitwise-identical output either
+    # way (see repro.core.tcp.maxmin_fused_step).
+    x, order_carry, rebuilt = maxmin_fused_step(
+        sim.R, caps_t, demand, order_carry)
+    x = jnp.where(sim.has_links, jnp.minimum(x, demand), INTERNAL_RATE)
+    return x, order_carry, rebuilt
 
 
 def _appaware_rates(sim: CompiledSim, caps_t, state: FlowState, dt_alloc,
@@ -415,6 +421,15 @@ class SimResult:
     tuples_per_mb: float
     dt: float
     caps_t: np.ndarray | None = None   # [T, L] per-tick capacities
+    # [T] bool — ticks on which the tcp solver's demand-order cache rebuilt
+    # its rank operand (all-False for non-tcp policies); observability for
+    # the order cache's hit rate, not a correctness input
+    order_rebuilds: np.ndarray | None = None
+
+    @property
+    def n_order_rebuilds(self) -> int:
+        return 0 if self.order_rebuilds is None else int(
+            np.sum(self.order_rebuilds))
 
     def _warm(self, arr):
         return arr[arr.shape[0] // 4:]
@@ -537,51 +552,60 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
     else:
         caps_sched = jnp.zeros((0, sim.caps.shape[0]), jnp.float32)
 
+    no_rebuild = jnp.zeros((), bool)
+
     def policy_rates(caps_t, Qs, Qr, B, prod_rate, drain_ewma, v_acc,
-                     ls, lr, mu):
+                     ls, lr, mu, oc):
+        """→ (rates, order_carry', rebuilt). Only tcp threads a real order
+        carry; the rest pass ``oc`` through untouched (an empty tuple, so
+        the scan carry stays policy-minimal — statically gated below)."""
         if policy == "tcp":
             return _tcp_rates(sim, caps_t, Qs, Qr, prod_rate, drain_ewma,
-                              dt, qcap)
+                              dt, qcap, oc)
         if policy == "fixed":
-            return jnp.where(sim.has_links, x_fixed, INTERNAL_RATE)
-        if policy == "appaware":
+            x = jnp.where(sim.has_links, x_fixed, INTERNAL_RATE)
+        elif policy == "appaware":
             # the application profiler reports the *useful* receiver backlog
             # B (bytes transferred but not yet joined — stale drops still
             # count as backlog: the paper's memory-overrun signal, Fig. 5)
             st = FlowState(ls_t=ls, lr_t=lr, v=v_acc, ls_t1=Qs, lr_t1=B)
-            return _appaware_rates(sim, caps_t, st, dt * upd_every,
-                                   solver=solver)
-        if policy == "appfair":
+            x = _appaware_rates(sim, caps_t, st, dt * upd_every,
+                                solver=solver)
+        elif policy == "appfair":
             prio = group_by_throughput(mu, n_groups)
             x = strict_priority_alloc(
                 sim.R, caps_t, sim.app_of_flow, prio, n_groups=n_groups
             )
-            return jnp.where(sim.has_links, x, INTERNAL_RATE)
-        raise ValueError(policy)
+            x = jnp.where(sim.has_links, x, INTERNAL_RATE)
+        else:
+            raise ValueError(policy)
+        return x, oc, no_rebuild
 
     def body(carry, xs):
         tick, caps_t = xs
         (Qs, Qr, B, x, v_acc, ls, lr, prod_rate, drain_ewma, mu,
-         mu_acc) = carry
+         mu_acc, oc) = carry
         caps_upd = sim.caps if caps_t is None else caps_t
 
         def updated(_):
             mu_new = (ewma_throughput(mu, mu_acc / (dt * upd_every), alpha)
                       if policy == "appfair" else mu)
-            x_new = policy_rates(caps_upd, Qs, Qr, B, prod_rate, drain_ewma,
-                                 v_acc, ls, lr, mu_new)
-            return x_new, z, Qs, B, mu_new, jnp.zeros_like(mu_acc)
+            x_new, oc_new, reb = policy_rates(
+                caps_upd, Qs, Qr, B, prod_rate, drain_ewma,
+                v_acc, ls, lr, mu_new, oc)
+            return (x_new, z, Qs, B, mu_new, jnp.zeros_like(mu_acc),
+                    oc_new, reb)
 
         def kept(_):
-            return x, v_acc, ls, lr, mu, mu_acc
+            return x, v_acc, ls, lr, mu, mu_acc, oc, no_rebuild
 
         if upd_every == 1:
             # every-tick policies (tcp/fixed defaults): no lax.cond in the
             # hot loop — the branch dispatch and its fusion barrier go away
-            x, v_acc, ls, lr, mu, mu_acc = updated(None)
+            x, v_acc, ls, lr, mu, mu_acc, oc, reb = updated(None)
         else:
             do_upd = (tick % upd_every) == 0
-            x, v_acc, ls, lr, mu, mu_acc = jax.lax.cond(
+            x, v_acc, ls, lr, mu, mu_acc, oc, reb = jax.lax.cond(
                 do_upd, updated, kept, None)
 
         Qs1, Qr1, transfer, drain, (sink, sink_app, wait, load) = _tick(
@@ -600,12 +624,16 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
             mu_acc = mu_acc + sink_app
         return (
             (Qs1, Qr1, B, x, v_acc, ls, lr, prod_rate,
-             drain_ewma, mu, mu_acc),
-            (sink, sink_app, wait, load),
+             drain_ewma, mu, mu_acc, oc),
+            (sink, sink_app, wait, load, reb),
         )
 
     mu0 = jnp.zeros((sim.n_apps,), jnp.float32)
-    carry0 = (z, z, z, z, z, z, z, z, z, mu0, mu0)
+    # the demand-order cache only exists on the tcp path: other policies
+    # carry an empty pytree, so their scan carries cost exactly what they
+    # did before the order cache existed
+    oc0 = maxmin_order_init(F) if policy == "tcp" else ()
+    carry0 = (z, z, z, z, z, z, z, z, z, mu0, mu0, oc0)
     # None is an empty pytree leaf: static sims stream no capacity xs
     xs = (jnp.arange(n_ticks), caps_sched if dynamic else None)
     _, ys = jax.lax.scan(body, carry0, xs)
@@ -641,7 +669,7 @@ def simulate(
     """Run one experiment (paper §VI: 600 s runs, Δt = 5 s allocator)."""
     n_ticks = int(round(smoke_seconds(seconds) / dt))
     upd_every = resolve_upd_every(policy, dt, upd_every)
-    sink, sink_app, wait, load, caps_sched = _run(
+    sink, sink_app, wait, load, rebuilds, caps_sched = _run(
         sim, policy, n_ticks, dt, upd_every,
         x_fixed=None if x_fixed is None else jnp.asarray(x_fixed, jnp.float32),
         alpha=alpha, n_groups=n_groups, qcap=qcap, solver=solver,
@@ -656,4 +684,5 @@ def simulate(
         tuples_per_mb=sim.tuples_per_mb,
         dt=dt,
         caps_t=np.asarray(caps_sched) if sim.is_dynamic else None,
+        order_rebuilds=np.asarray(rebuilds),
     )

@@ -224,6 +224,7 @@ class TestConservationThroughFusedSolver:
     def test_per_tick_conservation_with_fused_rates(self):
         import jax.numpy as jnp
 
+        from repro.core.tcp import maxmin_order_init
         from repro.net import link_failure_schedule
         from repro.streams.simulator import _tcp_rates, _tick
 
@@ -236,11 +237,13 @@ class TestConservationThroughFusedSolver:
         prod_rate = drain_ewma = jnp.zeros((F,), jnp.float32)
         delivered = 0.0
         base = np.asarray(sim.caps)
+        oc = maxmin_order_init(sim.R.shape[0])
         for t in range(60):  # 30 s: failure at 10 s, recovery at 20 s
             caps_t = jnp.asarray(sched.caps_at(base, t * DT), jnp.float32)
-            # the real tcp policy step: demand-clamped fused max-min
-            x = _tcp_rates(sim, caps_t, Qs, Qr, prod_rate, drain_ewma,
-                           DT, qcap)
+            # the real tcp policy step: demand-clamped fused max-min with
+            # the demand-order carry threaded tick to tick
+            x, oc, _ = _tcp_rates(sim, caps_t, Qs, Qr, prod_rate,
+                                  drain_ewma, DT, qcap, oc)
             Qs, Qr, transfer, drain, (sink, _, _, load) = _tick(
                 sim, Qs, Qr, x, DT, qcap, caps_t=caps_t)
             t_in = sim.M_in @ transfer

@@ -1,0 +1,240 @@
+"""Crossover dispatch + order cache tests for the fused max-min solver.
+
+The solver carries two water-level forms behind a trace-time crossover on
+the (padded) flow count (`MAXMIN_CROSSOVER_F`): the rank-prefix GEMM form
+(order-only left operand, cacheable across ticks) and the argsort+cumsum
+form. This suite pins:
+
+  * form parity — both forms agree ≤ 1e-5 at shapes straddling the
+    crossover, including the degenerate edges (zero demand, single flow,
+    all-tied demands);
+  * static dispatch — form selection is a python-level branch on a static
+    shape, so sweeping demands/capacities at a fixed shape never grows the
+    jit cache (no-recompile);
+  * the order cache — `maxmin_fused_step` is bitwise-identical to the
+    fresh `maxmin_fused` solve whatever the carry's hit pattern, rebuilds
+    exactly when the demand *order* changes (once, on the first tick, for
+    static demands), and the blocked GEMM variant matches the single-pass
+    one.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tcp import (
+    MAXMIN_CROSSOVER_F,
+    maxmin_fused,
+    maxmin_fused_step,
+    maxmin_order_init,
+)
+
+ATOL = 1e-5
+
+
+def _instance(seed, F, L, max_links=4):
+    rng = np.random.default_rng(seed)
+    R = np.zeros((F, L), np.float32)
+    for f in range(F):
+        k = int(rng.integers(0, min(L, max_links) + 1))
+        if k:
+            R[f, rng.choice(L, k, replace=False)] = 1.0
+    cap = rng.uniform(0.0, 20.0, L).astype(np.float32)
+    d = rng.uniform(0.0, 10.0, F).astype(np.float32)
+    return R, cap, d
+
+
+def _forms(R, cap, d, **kw):
+    a = np.asarray(maxmin_fused(jnp.asarray(R), jnp.asarray(cap),
+                                jnp.asarray(d), form="gemm", **kw))
+    b = np.asarray(maxmin_fused(jnp.asarray(R), jnp.asarray(cap),
+                                jnp.asarray(d), form="sorted", **kw))
+    return a, b
+
+
+class TestFormParity:
+    # shapes straddling the crossover: well below, just below, at, above
+    @pytest.mark.parametrize("F,L", [
+        (12, 8),
+        (MAXMIN_CROSSOVER_F - 1, 24),
+        (MAXMIN_CROSSOVER_F, 24),
+        (MAXMIN_CROSSOVER_F + 61, 32),
+    ])
+    def test_forms_agree_across_crossover(self, F, L):
+        for seed in (0, 1):
+            R, cap, d = _instance(seed, F, L)
+            a, b = _forms(R, cap, d)
+            np.testing.assert_allclose(a, b, atol=ATOL,
+                                       rtol=ATOL * np.maximum(a, 1.0).max())
+
+    def test_zero_demand(self):
+        R = np.ones((6, 3), np.float32)
+        cap = np.full(3, 4.0, np.float32)
+        a, b = _forms(R, cap, np.zeros(6, np.float32))
+        np.testing.assert_allclose(a, 0.0, atol=ATOL)
+        np.testing.assert_allclose(b, 0.0, atol=ATOL)
+
+    def test_single_flow(self):
+        R = np.array([[1.0, 1.0]], np.float32)
+        cap = np.array([2.0, 5.0], np.float32)
+        a, b = _forms(R, cap, np.array([9.0], np.float32))
+        assert a[0] == pytest.approx(2.0, abs=ATOL)
+        assert b[0] == pytest.approx(2.0, abs=ATOL)
+
+    def test_all_tied_demands(self):
+        # every demand identical: the order machinery sees nothing but
+        # index tie-breaks — both forms must produce the equal split
+        F = 8
+        R = np.ones((F, 1), np.float32)
+        cap = np.array([4.0], np.float32)
+        d = np.full(F, 3.0, np.float32)
+        a, b = _forms(R, cap, d)
+        np.testing.assert_allclose(a, 0.5, atol=ATOL)
+        np.testing.assert_allclose(b, 0.5, atol=ATOL)
+
+    def test_blocked_gemm_matches_single_pass(self):
+        for F, L in [(96, 16), (200, 32)]:
+            R, cap, d = _instance(2, F, L)
+            a = np.asarray(maxmin_fused(
+                jnp.asarray(R), jnp.asarray(cap), jnp.asarray(d),
+                form="gemm", block_flows=0))        # 0 → force single-pass
+            b = np.asarray(maxmin_fused(
+                jnp.asarray(R), jnp.asarray(cap), jnp.asarray(d),
+                form="gemm", block_flows=32))
+            np.testing.assert_allclose(
+                a, b, atol=ATOL, rtol=ATOL * np.maximum(a, 1.0).max())
+
+    def test_auto_dispatch_matches_forced_form(self):
+        # the default (form=None) must equal the side of the crossover the
+        # static flow count selects — below: gemm, at/above: sorted
+        R, cap, d = _instance(3, 20, 10)
+        auto = np.asarray(maxmin_fused(jnp.asarray(R), jnp.asarray(cap),
+                                       jnp.asarray(d)))
+        gemm = np.asarray(maxmin_fused(jnp.asarray(R), jnp.asarray(cap),
+                                       jnp.asarray(d), form="gemm"))
+        np.testing.assert_array_equal(auto, gemm)
+        F = MAXMIN_CROSSOVER_F
+        R, cap, d = _instance(4, F, 16)
+        auto = np.asarray(maxmin_fused(jnp.asarray(R), jnp.asarray(cap),
+                                       jnp.asarray(d)))
+        srt = np.asarray(maxmin_fused(jnp.asarray(R), jnp.asarray(cap),
+                                      jnp.asarray(d), form="sorted"))
+        np.testing.assert_array_equal(auto, srt)
+
+
+class TestStaticDispatch:
+    def test_no_recompile_across_value_sweep(self):
+        # dispatch is decided by *shape* at trace time: sweeping values at
+        # one shape compiles exactly one executable per shape
+        F, L = 16, 8
+        R, cap, d = _instance(5, F, L)
+        maxmin_fused(jnp.asarray(R), jnp.asarray(cap), jnp.asarray(d))
+        n0 = maxmin_fused._cache_size()
+        rng = np.random.default_rng(9)
+        for _ in range(5):
+            d2 = rng.uniform(0.0, 10.0, F).astype(np.float32)
+            c2 = rng.uniform(0.1, 20.0, L).astype(np.float32)
+            maxmin_fused(jnp.asarray(R), jnp.asarray(c2), jnp.asarray(d2))
+        assert maxmin_fused._cache_size() == n0
+
+
+class TestOrderCache:
+    def test_step_bitwise_matches_fresh(self):
+        # whatever the carry's hit pattern — first-tick rebuild, kept
+        # order, genuine order change — the step output is bitwise equal
+        # to a fresh solve on the same inputs
+        rng = np.random.default_rng(11)
+        for seed in range(6):
+            F = int(rng.integers(2, 24))
+            L = int(rng.integers(2, 16))
+            R, cap, d = _instance(seed, F, L)
+            carry = maxmin_order_init(F)
+            for k in range(8):
+                if k in (3, 6):
+                    d = rng.uniform(0.0, 10.0, F).astype(np.float32)
+                else:
+                    d = (d * np.float32(1.002)).astype(np.float32)
+                x, carry, _ = maxmin_fused_step(
+                    jnp.asarray(R), jnp.asarray(cap), jnp.asarray(d), carry)
+                ref = maxmin_fused(jnp.asarray(R), jnp.asarray(cap),
+                                   jnp.asarray(d))
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(ref))
+
+    def test_rebuild_counting(self):
+        # monotone rescaling preserves the demand order → no rebuild;
+        # swapping two demands breaks it → exactly one rebuild. Every flow
+        # is on-net (the solver zeroes off-net demands, which would mask
+        # an order change involving them).
+        F, L = 10, 6
+        rng = np.random.default_rng(7)
+        R = np.zeros((F, L), np.float32)
+        for f in range(F):
+            R[f, rng.choice(L, 2, replace=False)] = 1.0
+        cap = rng.uniform(1.0, 20.0, L).astype(np.float32)
+        d = np.sort(rng_unique(F))           # strictly increasing, no ties
+        carry = maxmin_order_init(F)
+        _, carry, reb0 = maxmin_fused_step(
+            jnp.asarray(R), jnp.asarray(cap), jnp.asarray(d), carry)
+        assert bool(reb0)                    # first tick always rebuilds
+        _, carry, reb1 = maxmin_fused_step(
+            jnp.asarray(R), jnp.asarray(cap),
+            jnp.asarray(d * np.float32(2.0)), carry)
+        assert not bool(reb1)                # order preserved → kept
+        d2 = d.copy()
+        d2[0], d2[-1] = d[-1], d[0]          # order broken
+        _, carry, reb2 = maxmin_fused_step(
+            jnp.asarray(R), jnp.asarray(cap), jnp.asarray(d2), carry)
+        assert bool(reb2)
+
+    def test_static_demand_scan_rebuilds_once(self):
+        # the perf-gate invariant, in miniature: constant demands over a
+        # scan rebuild the order operand exactly once (tick 0)
+        F, L = 12, 8
+        R, cap, d = _instance(8, F, L)
+
+        def step(carry, _):
+            _, carry, reb = maxmin_fused_step(
+                jnp.asarray(R), jnp.asarray(cap), jnp.asarray(d), carry)
+            return carry, reb
+
+        _, rebs = jax.lax.scan(step, maxmin_order_init(F), None, length=32)
+        assert int(np.sum(np.asarray(rebs))) == 1
+
+    def test_step_under_vmap_matches_fresh(self):
+        # the fleet path: batched step (cond lowers to select) must still
+        # be bitwise-identical to per-member fresh solves
+        B, F, L = 6, 14, 10
+        rng = np.random.default_rng(13)
+        R = np.zeros((B, F, L), np.float32)
+        for b in range(B):
+            for f in range(F):
+                R[b, f, rng.choice(L, 3, replace=False)] = 1.0
+        cap = rng.uniform(1.0, 8.0, (B, L)).astype(np.float32)
+        d = rng.uniform(0.0, 5.0, (B, F)).astype(np.float32)
+
+        def one(R1, c1, d1):
+            carry = maxmin_order_init(F)
+            x1, carry, _ = maxmin_fused_step(R1, c1, d1, carry)
+            x2, _, _ = maxmin_fused_step(R1, c1, d1 * 1.5, carry)
+            return x1, x2
+
+        x1, x2 = jax.jit(jax.vmap(one))(jnp.asarray(R), jnp.asarray(cap),
+                                        jnp.asarray(d))
+        for b in range(B):
+            np.testing.assert_array_equal(
+                np.asarray(x1[b]),
+                np.asarray(maxmin_fused(jnp.asarray(R[b]),
+                                        jnp.asarray(cap[b]),
+                                        jnp.asarray(d[b]))))
+            np.testing.assert_array_equal(
+                np.asarray(x2[b]),
+                np.asarray(maxmin_fused(jnp.asarray(R[b]),
+                                        jnp.asarray(cap[b]),
+                                        jnp.asarray(d[b] * 1.5))))
+
+
+def rng_unique(F, seed=17):
+    """F strictly distinct positive float32 demands."""
+    vals = np.random.default_rng(seed).uniform(0.5, 10.0, 4 * F)
+    return np.unique(vals.astype(np.float32))[:F].astype(np.float32)

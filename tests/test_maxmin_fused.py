@@ -6,8 +6,10 @@ max-min allocation:
   1. parity ≤ 1e-5 against the retained oracles on randomized [F, L]
      instances — the plain-numpy sequential progressive fill
      (`demand_limited_maxmin_np`, unbounded rounds) and the while-loop
-     clamp-and-resolve oracle (`demand_limited_maxmin`, iters=F so it is
-     fully converged);
+     progressive-filling oracle (`demand_limited_maxmin`, bisection-based
+     per-link levels — independent math from the fused solver), which
+     both satisfy the KKT certificate *unconditionally* (the former
+     clamp-and-resolve oracle did not: seed 5041, pinned below);
   2. the max-min optimality KKT invariant checked *directly* on the fused
      solver's output: every flow is either demand-capped or crosses a
      saturated link on which no flow has a greater rate;
@@ -109,24 +111,36 @@ class TestFusedParity:
     @settings(max_examples=15, deadline=None)
     @given(seed=st.integers(0, 10_000))
     def test_matches_while_loop_oracle(self, seed):
-        # The retained clamp-and-resolve oracle (run to full convergence:
-        # each outer round freezes ≥ 1 flow, so iters=F suffices) is itself
-        # only *almost* exact — on rare adversarial instances its
-        # freeze-at-demand ordering lands on a feasible, work-conserving
-        # fixed point that is not max-min (it fails the KKT invariant the
-        # fused solver passes; e.g. seed 5041 of this draw). So: the fused
-        # solver must always match the sequential numpy reference, and
-        # must match the while-loop oracle whenever the oracle itself
-        # found the exact point.
+        # The while-loop oracle is true progressive filling (freeze sated
+        # flows, else the global-minimum bottleneck level; per-link levels
+        # by bisection), so it lands on the max-min point on EVERY
+        # instance: the fused solver must match it unconditionally, and
+        # the oracle's own output must pass the KKT certificate. (Its
+        # predecessor — clamp-at-demand-and-resolve — converged to a
+        # feasible non-max-min fixed point on rare instances, e.g. seed
+        # 5041 of this draw, and this assertion was gated on the oracle
+        # agreeing with the numpy reference. The gate is gone.)
         R, cap, d = _instance(seed, 16, 6, 3, False, False, True)
         ref = demand_limited_maxmin_np(R, cap, d)
         got = _fused(R, cap, d, rounds=None)
         np.testing.assert_allclose(got, ref, atol=ATOL * 10, rtol=1e-5)
         oracle = np.asarray(demand_limited_maxmin(
-            jnp.asarray(R), jnp.asarray(cap), jnp.asarray(d), iters=16))
-        if np.allclose(oracle, ref, atol=ATOL * 10, rtol=1e-5):
-            np.testing.assert_allclose(got, oracle, atol=ATOL * 10,
-                                       rtol=1e-5)
+            jnp.asarray(R), jnp.asarray(cap), jnp.asarray(d)))
+        np.testing.assert_allclose(got, oracle, atol=ATOL * 10, rtol=1e-5)
+        _assert_maxmin_invariant(R, cap, d, oracle)
+
+    def test_seed_5041_oracle_is_maxmin(self):
+        # regression pin for the clamp-and-resolve defect: flow 15's
+        # demand-free max-min share (1.615) covered its demand (1.458) at
+        # round 0, so the old oracle froze it at demand — but demand caps
+        # elsewhere raise its link-3 competitors in the true optimum,
+        # where its level is 1.423 < demand. Progressive filling gets it.
+        R, cap, d = _instance(5041, 16, 6, 3, False, False, True)
+        ref = demand_limited_maxmin_np(R, cap, d)
+        oracle = np.asarray(demand_limited_maxmin(
+            jnp.asarray(R), jnp.asarray(cap), jnp.asarray(d)))
+        np.testing.assert_allclose(oracle, ref, atol=ATOL * 10, rtol=1e-5)
+        _assert_maxmin_invariant(R, cap, d, oracle)
 
     @settings(max_examples=40, deadline=None)
     @given(seed=st.integers(0, 10_000),
@@ -267,5 +281,5 @@ class TestCorpusRounds:
             return np.asarray(sinks)
 
         fused = run(maxmin_fused)
-        oracle = run(lambda R, c, d: demand_limited_maxmin(R, c, d, iters=8))
+        oracle = run(demand_limited_maxmin)
         np.testing.assert_allclose(fused, oracle, atol=1e-4)
