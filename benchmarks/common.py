@@ -47,11 +47,24 @@ def emit(rows: list[dict], name: str) -> None:
 
     Every section also accumulates into ``BENCH_<name>.json`` (in
     ``BENCH_DIR``, default the repo root) so CI can upload the per-PR perf
-    trajectory as a workflow artifact."""
+    trajectory as a workflow artifact.
+
+    ``us_per_call`` is *optional* — rows that carry no timing (pure
+    invariant/observable rows like ``fleet_order_cache``) simply omit the
+    field and print ``-`` in its column. A row that DOES carry it must
+    carry a real measurement: zero or negative timings are rejected here
+    so a broken timer can't silently land as a plausible-looking 0.0 in
+    the committed JSON again."""
     for r in rows:
+        us = r.get("us_per_call")
+        if us is not None and not float(us) > 0.0:
+            raise ValueError(
+                f"row {r.get('name', name)!r}: us_per_call={us!r} is not a "
+                f"positive timing — omit the field for non-timing rows")
         derived = ";".join(f"{k}={v}" for k, v in r.items()
                            if k not in ("name", "us_per_call"))
-        print(f"{r.get('name', name)},{r.get('us_per_call', 0):.2f},{derived}")
+        col = f"{float(us):.2f}" if us is not None else "-"
+        print(f"{r.get('name', name)},{col},{derived}")
     _JSON_ROWS.setdefault(name, []).extend(rows)
     path = os.path.join(os.environ.get("BENCH_DIR", _REPO_ROOT),
                         f"BENCH_{name}.json")

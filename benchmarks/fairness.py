@@ -22,7 +22,6 @@ def run(seconds: int = 600, dt_alloc: float = 10.0) -> list[dict]:
 
     rows = [{
         "name": "fig13_fairness_TCP",
-        "us_per_call": 0.0,
         "jain": round(j_tcp, 3),
         "per_app": "/".join(f"{t:.0f}" for t in tcp_app),
     }]
@@ -43,7 +42,6 @@ def run(seconds: int = 600, dt_alloc: float = 10.0) -> list[dict]:
         j = float(jain_index(jnp.asarray(total / intervals)))
         rows.append({
             "name": f"fig13_fairness_AppFair_alpha{alpha}",
-            "us_per_call": 0.0,
             "jain": round(j, 3),
             "per_app": "/".join(f"{t:.0f}" for t in total / intervals),
         })

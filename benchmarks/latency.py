@@ -22,7 +22,6 @@ def run(figure: str = "fig10") -> list[dict]:
             imp = (1 - aa.avg_latency_s / max(tcp.avg_latency_s, 1e-9)) * 100
             rows.append({
                 "name": f"{figure}_latency_{app_name}_{cap_name}",
-                "us_per_call": 0.0,
                 "tcp_latency_s": round(tcp.avg_latency_s, 2),
                 "appaware_latency_s": round(aa.avg_latency_s, 2),
                 "improvement_pct": round(imp, 1),

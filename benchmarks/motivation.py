@@ -45,7 +45,6 @@ def run(fast: bool = True) -> list[dict]:
         aa = simulate(sim, "appaware", seconds=SECONDS, dt=DT)
         rows.append({
             "name": f"fig3_motivation_{name}",
-            "us_per_call": 0.0,
             "tcp_tps": round(tcp.throughput_tps, 1),
             "bruteforce_tps": round(best, 1),
             "appaware_tps": round(aa.throughput_tps, 1),

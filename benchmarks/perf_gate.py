@@ -13,7 +13,15 @@ checks, per policy:
   static-demand corpus scan (the tick-0 cold start). More than one means
   the O(F) order check is spuriously invalidating carried state (the
   order cache silently degrades to rebuild-every-tick); zero means the
-  cold start stopped being counted.
+  cold start stopped being counted, and
+* the ``fleet_campaign`` row — the streaming campaign mode
+  (``FleetRunner.run_campaign``) must keep its throughput within the
+  floor of the materialized path on the same corpus
+  (``stream_vs_materialized``: chunk staging re-done per call has to be
+  paid for by its overlap with in-flight device compute) AND its host
+  staging bounded (``peak_staged_rows`` ≤ 2 × ``chunk_rows`` — the two
+  ping/pong slots; more means the bounded-memory property silently
+  broke and a 10⁴-scenario campaign would materialize after all).
 
 Missing input files are a hard, *loud* failure: benchmark snapshots are
 checked into the repo (see ``.gitignore`` history — they used to be
@@ -58,6 +66,12 @@ SMOKE_FLOORS = {"fleet_tcp": 1.05, "fleet_appaware": 1.05}
 # Full-mode floors: a guard band under the weakest container class we
 # have measured (1.16/1.16, loaded 1-core).
 FULL_FLOORS = {"fleet_tcp": 1.1, "fleet_appaware": 1.1}
+
+# Streaming-vs-materialized throughput floors (ratio of warm wall-clocks,
+# same corpus, interleaved reps): ISSUE-7 target is >= 0.9x in full mode;
+# smoke keeps a wider band for the noisy shared CI runner.
+CAMPAIGN_SMOKE_FLOOR = 0.8
+CAMPAIGN_FULL_FLOOR = 0.9
 
 # Companion snapshots that must exist alongside the gate's own input —
 # their absence means the bench job silently skipped a section.
@@ -121,6 +135,31 @@ def check(path: str) -> int:
                 f"fleet_order_cache: static-demand rebuilds per scenario "
                 f"in [{lo}, {hi}], expected exactly 1 (order cache "
                 f"{'over-invalidates' if hi > 1 else 'lost its cold-start count'})")
+    # streaming campaign mode: throughput floor + bounded host staging
+    cp = by_name.get("fleet_campaign")
+    cfloor = CAMPAIGN_SMOKE_FLOOR if smoke else CAMPAIGN_FULL_FLOOR
+    if cp is None:
+        failures.append(f"fleet_campaign: missing from {path}")
+        table.append(("fleet_campaign", "missing", f"{cfloor:.2f}", "-",
+                      "MISSING"))
+    else:
+        ratio = float(cp.get("stream_vs_materialized", 0.0))
+        peak = int(cp.get("peak_staged_rows", -1))
+        crows = int(cp.get("chunk_rows", 0))
+        ok_ratio = ratio >= cfloor
+        ok_peak = 0 <= peak <= 2 * crows
+        status = "ok" if (ok_ratio and ok_peak) else "REGRESSED"
+        table.append(("fleet_campaign", f"{ratio:.2f}", f"{cfloor:.2f}",
+                      f"peak {peak}/{2 * crows}", status))
+        if not ok_ratio:
+            failures.append(
+                f"fleet_campaign: stream_vs_materialized {ratio:.2f} < "
+                f"floor {cfloor:.2f} (streaming mode lost its overlap)")
+        if not ok_peak:
+            failures.append(
+                f"fleet_campaign: peak_staged_rows {peak} > 2 x chunk_rows "
+                f"{crows} — host staging is no longer bounded by the two "
+                f"ping/pong slots")
     # companion snapshots exist (content is informational — calibration
     # rows — but absence means the bench job dropped a section)
     bench_dir = os.path.dirname(os.path.abspath(path)) or "."

@@ -28,7 +28,7 @@ def run() -> list[dict]:
     for f in sorted(RESULTS.glob("*.json")):
         rec = json.loads(f.read_text())
         if not rec.get("ok"):
-            rows.append({"name": f"roofline_{f.stem}", "us_per_call": 0.0,
+            rows.append({"name": f"roofline_{f.stem}",
                          "error": rec.get("error", "?")[:80]})
             continue
         t = terms(rec)

@@ -22,7 +22,6 @@ def run(figure: str = "fig8") -> list[dict]:
             imp = (aa.throughput_tps / max(tcp.throughput_tps, 1e-9) - 1) * 100
             rows.append({
                 "name": f"{figure}_throughput_{app_name}_{cap_name}",
-                "us_per_call": 0.0,
                 "tcp_tps": round(tcp.throughput_tps, 1),
                 "appaware_tps": round(aa.throughput_tps, 1),
                 "improvement_pct": round(imp, 1),

@@ -14,7 +14,6 @@ def run() -> list[dict]:
             tcp, aa = run_pair(app_fn, singlehop_topo(cap))
             rows.append({
                 "name": f"fig12_utilization_{app_name}_{cap_name}",
-                "us_per_call": 0.0,
                 "tcp_util": round(tcp.bottleneck_utilization(), 3),
                 "appaware_util": round(aa.bottleneck_utilization(), 3),
             })

@@ -8,6 +8,7 @@ from repro.streams.app import (  # noqa: F401
     source_sink_paths,
 )
 from repro.streams.fleet import (  # noqa: F401
+    CampaignResult,
     FleetRunner,
     FleetShape,
     pad_sim,
@@ -18,6 +19,7 @@ from repro.streams.placement import STRATEGIES, round_robin, packed, traffic_awa
 from repro.streams.scenarios import (  # noqa: F401
     Scenario,
     bench_fleet,
+    campaign_fleet,
     capacity_sweep,
     compile_fleet,
     link_failure_sweep,
@@ -27,9 +29,11 @@ from repro.streams.scenarios import (  # noqa: F401
     time_varying_sweep,
 )
 from repro.streams.simulator import (  # noqa: F401
+    CAMPAIGN_METRICS,
     CompiledSim,
     SimResult,
     compile_sim,
+    metric_index,
     simulate,
 )
 from repro.streams.workloads import (  # noqa: F401

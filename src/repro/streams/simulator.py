@@ -56,6 +56,25 @@ _EPS = 1e-9
 INTERNAL_RATE = 1e6  # MB/s: same-machine flows move at memory speed
 _LAT_CAP = 1e4       # s: cap on per-flow latency contribution (stalled flows)
 
+# The campaign summary vector computed by the in-program metric epilogue
+# (`_metrics_epilogue`), in order. Throughput entries are MB-based (the
+# per-scenario ``tuples_per_mb`` conversion is one exact scalar multiply,
+# applied host-side by the consumers) so one padded fleet program serves
+# scenarios with different tuple densities.
+CAMPAIGN_METRICS = (
+    "avg_tput_mb_s",      # post-warmup mean sink rate
+    "final_tput_mb_s",    # smoothed sink rate at the last tick
+    "avg_latency_s",      # post-warmup mean path latency
+    "utilization",        # bottleneck-link utilization (Fig. 12 metric)
+    "dip_depth",          # fractional dip after t_event (0 = none)
+    "recovery_time_s",    # settling time after t_event (inf = never)
+    "total_sink_mb",      # total MB delivered to sinks
+)
+
+
+def metric_index(name: str) -> int:
+    return CAMPAIGN_METRICS.index(name)
+
 
 @functools.partial(
     jax.tree_util.register_dataclass,
@@ -257,6 +276,78 @@ def _caps_over(sim: CompiledSim, ts: jnp.ndarray) -> jnp.ndarray:
     return jnp.maximum(caps, 0.0)
 
 
+def _metrics_epilogue(sink, wait, load, caps_grid, path_w, dt: float,
+                      t_event: float, win_s: float = 5.0,
+                      pre_s: float = 20.0, frac: float = 0.95,
+                      hot_thresh: float = 0.5) -> jnp.ndarray:
+    """On-device reduction of one run's trajectories to the
+    :data:`CAMPAIGN_METRICS` vector — THE metric definition for both the
+    streamed campaign path (where only this ``[n_metrics]`` summary ever
+    leaves the device) and the materialized path (``simulate`` /
+    ``FleetRunner.run`` attach the same in-program vector to
+    ``SimResult.metrics``), so streamed and materialized metrics are one
+    computation, not two reimplementations that can drift.
+
+    Mirrors the host-side ``SimResult`` properties (``throughput_tps``,
+    ``avg_latency_s``, ``bottleneck_utilization``, ``dip_depth``,
+    ``recovery_time_s``) up to float re-association — the host properties
+    stay the readable reference; a consistency test pins the two together.
+    Runs under the fleet vmap on padded shapes: padded flows wait 0 s with
+    zero ``path_w`` weight, padded links carry zero load against huge
+    capacity, so padding never moves a metric.
+    """
+    T = sink.shape[0]
+    warm = T // 4
+    rate = sink / dt                                           # [T] MB/s
+    lat_t = wait @ path_w                                      # [T]
+    # bottleneck utilization per SimResult.bottleneck_utilization: mean
+    # per-tick utilization against the *scheduled* capacity, averaged over
+    # links carrying >= hot_thresh of capacity (all-cold fallback: the
+    # near-max links)
+    util = (load[warm:] / jnp.maximum(caps_grid[warm:], _EPS)).mean(0)
+    hot = util >= hot_thresh
+    hot = jnp.where(hot.any(), hot, util >= util.max() * 0.999)
+    utilization = (jnp.where(hot, util, 0.0).sum()
+                   / jnp.maximum(hot.sum(), 1).astype(util.dtype))
+    # transient metrics on the win_s-smoothed throughput (same edge
+    # handling as SimResult._smooth_tput: divide by the actual sample
+    # count so the trace boundaries don't fake a dip)
+    w = max(int(round(win_s / dt)), 1)
+    kern = jnp.ones((w,), rate.dtype)
+    r = (jnp.convolve(rate, kern, mode="same")
+         / jnp.convolve(jnp.ones_like(rate), kern, mode="same"))
+    i = min(int(round(t_event / dt)), T - 1)                   # static
+    pre_mean = r[max(0, i - int(round(pre_s / dt))):max(i, 1)].mean()
+    post = r[i:]
+    post_min = post.min()
+    dip = jnp.where(pre_mean > _EPS,
+                    jnp.maximum((pre_mean - post_min)
+                                / jnp.maximum(pre_mean, _EPS), 0.0), 0.0)
+    # settling time, branchless (the host version's dynamic slice
+    # `inside[first_out:]` becomes a masked argmax over a static window)
+    P = post.shape[0]
+    if P < 2:
+        recovery = jnp.zeros((), rate.dtype)
+    else:
+        steady = post[-max(P // 4, 1):].mean()
+        inside = (post >= frac * steady) & (post * frac <= steady)
+        first_out = jnp.argmax(~inside)
+        cand = inside & (jnp.arange(P) >= first_out)
+        recovery = jnp.where(
+            inside.all(), 0.0,
+            jnp.where(cand.any(), jnp.argmax(cand).astype(rate.dtype) * dt,
+                      jnp.inf))
+    return jnp.stack([
+        rate[warm:].mean(),
+        r[-1],
+        lat_t[warm:].mean(),
+        utilization,
+        dip,
+        recovery.astype(rate.dtype),
+        sink.sum(),
+    ])
+
+
 # --------------------------------------------------------------------------
 # one simulation tick (shared by all policies)
 # --------------------------------------------------------------------------
@@ -425,6 +516,19 @@ class SimResult:
     # its rank operand (all-False for non-tcp policies); observability for
     # the order cache's hit rate, not a correctness input
     order_rebuilds: np.ndarray | None = None
+    # [n_metrics] — the in-program CAMPAIGN_METRICS summary computed by the
+    # on-device epilogue (`_metrics_epilogue`). MB-based (tuples_per_mb is
+    # applied by consumers); the campaign streaming path returns exactly
+    # this vector, so "materialized metrics" and "streamed metrics" are by
+    # construction one definition
+    metrics: np.ndarray | None = None
+
+    def metric(self, name: str) -> float:
+        """One entry of the in-program epilogue vector by name (see
+        ``CAMPAIGN_METRICS``)."""
+        if self.metrics is None:
+            raise ValueError("run did not compute the metric epilogue")
+        return float(self.metrics[metric_index(name)])
 
     @property
     def n_order_rebuilds(self) -> int:
@@ -528,11 +632,13 @@ class SimResult:
 @functools.partial(
     jax.jit,
     static_argnames=("policy", "n_ticks", "dt", "upd_every",
-                     "alpha", "n_groups", "solver"),
+                     "alpha", "n_groups", "solver", "with_metrics",
+                     "t_event"),
 )
 def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
          upd_every: int, x_fixed=None, alpha: float = 0.5, n_groups: int = 8,
-         qcap: float = 8.0, solver: str = "sort", enforce=None):
+         qcap: float = 8.0, solver: str = "sort", enforce=None,
+         with_metrics: bool = False, t_event: float = 0.0):
     F = sim.R.shape[0]
     # per-scenario capacity-enforcement gate (see _tick): standalone sims
     # enforce whenever they carry a schedule; the fleet engine passes a
@@ -637,7 +743,18 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
     # None is an empty pytree leaf: static sims stream no capacity xs
     xs = (jnp.arange(n_ticks), caps_sched if dynamic else None)
     _, ys = jax.lax.scan(body, carry0, xs)
-    return (*ys, caps_sched)
+    if not with_metrics:
+        return (*ys, caps_sched)
+    # on-device metric epilogue: reduce the trajectories to the
+    # CAMPAIGN_METRICS summary *inside the program*, so a streaming caller
+    # can fetch [n_metrics] floats and leave the [T, ...] arrays on device
+    sink, _sink_app, wait, load, _reb = ys
+    caps_grid = (caps_sched if dynamic else
+                 jnp.broadcast_to(sim.caps[None, :],
+                                  (n_ticks, sim.caps.shape[0])))
+    metrics = _metrics_epilogue(sink, wait, load, caps_grid, sim.path_w,
+                                dt, t_event)
+    return (*ys, caps_sched, metrics)
 
 
 def smoke_seconds(seconds: float, cap: float = 120.0) -> float:
@@ -665,14 +782,16 @@ def simulate(
     n_groups: int = 8,
     qcap: float = 8.0,
     solver: str = "sort",
+    t_event: float = 0.0,
 ) -> SimResult:
     """Run one experiment (paper §VI: 600 s runs, Δt = 5 s allocator)."""
     n_ticks = int(round(smoke_seconds(seconds) / dt))
     upd_every = resolve_upd_every(policy, dt, upd_every)
-    sink, sink_app, wait, load, rebuilds, caps_sched = _run(
+    sink, sink_app, wait, load, rebuilds, caps_sched, metrics = _run(
         sim, policy, n_ticks, dt, upd_every,
         x_fixed=None if x_fixed is None else jnp.asarray(x_fixed, jnp.float32),
         alpha=alpha, n_groups=n_groups, qcap=qcap, solver=solver,
+        with_metrics=True, t_event=float(t_event),
     )
     return SimResult(
         sink_mb=np.asarray(sink),
@@ -685,4 +804,5 @@ def simulate(
         dt=dt,
         caps_t=np.asarray(caps_sched) if sim.is_dynamic else None,
         order_rebuilds=np.asarray(rebuilds),
+        metrics=np.asarray(metrics),
     )
