@@ -33,6 +33,14 @@ def multihop_topo(cap: float):
     return fat_tree(up=12.5).set_capacity(LinkKind.INTERNAL, cap)
 
 
+def smoke_mode() -> bool:
+    """True when REPRO_SMOKE is set (the CI runner): benchmarks shrink
+    their problem sizes / iteration counts, and perf_gate applies its
+    conservative smoke floors. One definition so a bench and the gate
+    can never disagree about which mode a run was in."""
+    return os.environ.get("REPRO_SMOKE", "").strip() not in ("", "0")
+
+
 _JSON_ROWS: dict[str, list[dict]] = {}
 
 

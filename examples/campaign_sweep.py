@@ -4,13 +4,17 @@ study with bounded memory — no trajectory array is ever held.
 Builds `campaign_fleet(2048)` — {TT, TI} × the paper's {10, 15, 20 Mbps}
 grid × {static, in-run link failure, in-run diurnal cycle}, each scenario
 jittered by a seeded rng — and streams it through
-`FleetRunner.run_campaign`: the bucket plan is computed over the whole
-campaign, scenarios flow through fixed-shape chunks that all reuse a
-handful of compiled executables, chunk k+1 is staged into ping/pong host
-buffers while chunk k runs on-device, and only the on-device metric
-epilogue's [rows, 7] summary ever crosses the device boundary. Host
-staging stays ≤ 2 chunk-slots and device residency ≤ 2 in-flight chunks
-however large the campaign — `last_stats` prints the evidence.
+`FleetRunner.run_campaign`'s three-stage pipeline: the bucket plan is
+computed over the whole campaign, scenarios flow through fixed-shape
+chunks that all reuse a handful of compiled executables, chunk k+1 is
+packed into rotating host slots and its H2D copy prefetched by the
+transfer worker while chunk k runs on-device (`chunk_rows="auto"` would
+size the chunks from the measured backend calibration; with >1 local
+device the chunk stream shards round-robin across devices), and only the
+on-device metric epilogue's [rows, 7] summary ever crosses the device
+boundary. Host staging stays ≤ 3 chunk-slots per stream and device
+residency ≤ 2 in-flight chunks however large the campaign — `last_stats`
+prints the evidence.
 
 The per-axis table below is pure `CampaignResult` column math: group the
 [N, 7] metric matrix by the generator's (app, capacity, kind) axes and
@@ -81,11 +85,15 @@ def main() -> None:
           f"{st['n_chunks']} chunks over {st['n_buckets']} buckets, "
           f"{runner.compile_cache_size()} compiled executables")
     print(f"host staging: peak {st['peak_staged_rows']} rows "
-          f"({st['peak_staged_bytes'] / 1e6:.1f} MB) — ping/pong bound "
-          f"2 x {st['chunk_rows']} rows, independent of N")
+          f"({st['peak_staged_bytes'] / 1e6:.1f} MB) — rotating-slot "
+          f"bound 3 x {st['chunk_rows']} rows x {st['n_streams']} "
+          f"stream(s), independent of N")
     print(f"staging overlap: {st['overlap_fraction']:.0%} of "
           f"{st['stage_s']:.2f}s staging hidden behind device compute; "
           f"metric fetches blocked {st['block_s']:.2f}s")
+    print(f"H2D prefetch: {st['transfer_s']:.2f}s of copies on the "
+          f"transfer worker, {st['transfer_overlap']:.0%} overlapped "
+          f"(dispatch thread waited {st['transfer_wait_s']:.2f}s)")
     held = cr.metrics.nbytes + cr.tuples_per_mb.nbytes
     print(f"retained per campaign: {held / 1e3:.0f} kB of metrics "
           f"({N} x {cr.metrics.shape[1]} floats) — no [T, ...] "

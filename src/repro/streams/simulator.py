@@ -757,6 +757,32 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
     return (*ys, caps_sched, metrics)
 
 
+def result_from_padded_row(sim: CompiledSim, b: int, dt: float,
+                           sink, sink_app, wait, load, rebuilds,
+                           caps_sched, metrics) -> SimResult:
+    """Slice row ``b`` of a padded bucket's (host-side) outputs back to
+    ``sim``'s true shapes — the ONE definition of a scenario's
+    :class:`SimResult`, shared by the materialized fleet path and the
+    streaming campaign collector so they cannot drift apart."""
+    F = sim.R.shape[0]
+    L, A = sim.caps.shape[0], sim.n_apps
+    return SimResult(
+        sink_mb=sink[b],
+        sink_mb_app=sink_app[b][:, :A],
+        # path-mean latency on the true [F] slice: bitwise-independent of
+        # bucket padding and pack structure
+        latency=wait[b][:, :F] @ np.asarray(sim.path_w),
+        link_load=load[b][:, :L],
+        caps=np.asarray(sim.caps),
+        kinds=np.asarray(sim.kinds),
+        tuples_per_mb=sim.tuples_per_mb,
+        dt=dt,
+        caps_t=caps_sched[b][:, :L] if sim.is_dynamic else None,
+        order_rebuilds=rebuilds[b],
+        metrics=None if metrics is None else metrics[b],
+    )
+
+
 def smoke_seconds(seconds: float, cap: float = 120.0) -> float:
     """CI short-run mode: ``REPRO_SMOKE=1`` caps run length so the tier-1
     suite finishes in minutes on a CPU runner (same dt, same warmup logic)."""

@@ -3,12 +3,17 @@
 The contract under test: ``FleetRunner.run_campaign`` streams an
 arbitrarily large scenario list through fixed-shape chunks and its metrics
 are **bitwise-identical** to the materialized ``run`` path on the same
-scenarios — chunking, ping/pong staging, and fetching only the on-device
-epilogue change *where* bytes live, never a single bit of *what* is
-computed. Plus: one compiled executable per bucket however many chunks
-stream through it, host staging bounded by the two ping/pong slots, the
-``fingerprint`` staging knob (content / identity / off), opt-in trajectory
-retention, and the epilogue-vs-host-property consistency contract.
+scenarios — chunking, triple-buffered staging, the three-stage pipeline's
+prefetching transfer worker, and fetching only the on-device epilogue
+change *where* bytes live, never a single bit of *what* is computed.
+Plus: one compiled executable per bucket however many chunks stream
+through it, host staging bounded by the three rotating slots per stream,
+the ``fingerprint`` staging knob (content / identity / off), opt-in
+trajectory retention, the pipeline timing stats (components sum to ≤ wall
+time; ``overlap_fraction`` well-defined for single-chunk campaigns), the
+``chunk_rows="auto"`` backend calibration, and the
+epilogue-vs-host-property consistency contract. Multi-device sharding of
+the chunk stream is covered by ``test_multidevice.py``.
 """
 import dataclasses
 
@@ -120,16 +125,18 @@ class TestChunkReuse:
 
     def test_bounded_staging_2048(self):
         # the acceptance-scale campaign: 10^3-scenario class, host staging
-        # bounded by the two ping/pong chunk slots, short horizon (the
-        # bound is about memory, not ticks)
+        # bounded by the three rotating chunk slots per stream (one per
+        # pipeline stage), short horizon (the bound is about memory, not
+        # ticks)
         sims = compile_fleet(campaign_fleet(2048, seed=1))
         runner = FleetRunner()
         cr = runner.run_campaign(sims, "tcp", seconds=4.0, dt=DT)
         stats = runner.last_stats
         assert cr.metrics.shape[0] == 2048
         assert np.isfinite(cr.metrics[:, :4]).all()
-        assert stats["peak_staged_rows"] <= 2 * stats["chunk_rows"]
-        assert stats["peak_staged_rows"] <= 2 * 64  # default chunk_rows
+        bound = 3 * stats["chunk_rows"] * stats["n_streams"]
+        assert stats["peak_staged_rows"] <= bound
+        assert stats["peak_staged_rows"] <= 3 * 64 * stats["n_streams"]
         assert stats["peak_staged_bytes"] > 0
         assert stats["n_chunks"] >= 2048 // 64
         assert runner.compile_cache_size() == stats["n_buckets"]
@@ -138,7 +145,96 @@ class TestChunkReuse:
         with pytest.raises(ValueError):
             FleetRunner().run_campaign(corpus[:4], chunk_rows=0)
         with pytest.raises(ValueError):
+            FleetRunner().run_campaign(corpus[:4], chunk_rows="adaptive")
+        with pytest.raises(ValueError):
             FleetRunner().run_campaign([])
+
+
+class TestPipelineStats:
+    """Campaign timing accounting: ``transfer_s`` is its own stat, the
+    components never exceed wall time, and ``overlap_fraction`` is
+    well-defined (== 1.0) for single-chunk campaigns."""
+
+    def test_components_sum_le_wall(self, corpus):
+        runner = FleetRunner()
+        runner.run_campaign(corpus[:96], "tcp", seconds=SECONDS, dt=DT,
+                            chunk_rows=16)
+        st = dict(runner.last_stats)
+        for key in ("stage_s", "dispatch_s", "block_s", "transfer_s",
+                    "transfer_wait_s", "wall_s"):
+            assert st[key] >= 0.0, key
+        # dispatch-thread components: staging, waiting on the prefetched
+        # copy, dispatch, and metric-fetch blocking all happen serially on
+        # the dispatch thread, so they must fit inside the wall clock.
+        # transfer_s itself rides the worker thread and may overlap any
+        # of them — it is excluded from the sum on purpose.
+        spent = (st["stage_s"] + st["transfer_wait_s"] + st["dispatch_s"]
+                 + st["block_s"])
+        assert spent <= st["wall_s"] + 1e-6
+        assert 0.0 <= st["overlap_fraction"] <= 1.0
+        assert 0.0 <= st["transfer_overlap"] <= 1.0
+
+    def test_single_chunk_overlap_well_defined(self, corpus):
+        # one bucket, one chunk: nothing is hideable (no compute is ever
+        # in flight while staging), so overlap_fraction reports the
+        # vacuous 1.0 instead of a misleading 0/0
+        sims = [s for s in corpus[:32]
+                if fleet_mod._sim_shape(s) == fleet_mod._sim_shape(
+                    corpus[0])][:6]
+        assert len(sims) >= 2
+        runner = FleetRunner()
+        runner.run_campaign(sims, "tcp", seconds=SECONDS, dt=DT,
+                            chunk_rows=64)
+        st = runner.last_stats
+        assert st["n_chunks"] == 1
+        assert st["overlap_fraction"] == 1.0
+
+    def test_transfer_stats_present(self, corpus):
+        runner = FleetRunner()
+        runner.run_campaign(corpus[:64], "tcp", seconds=SECONDS, dt=DT,
+                            chunk_rows=16)
+        st = runner.last_stats
+        assert st["transfer_s"] > 0.0
+        assert st["transfer_wait_s"] >= 0.0
+        assert st["n_streams"] >= 1
+        assert len(st["target_chunk_rows"]) == st["n_buckets"]
+
+
+class TestAutoChunk:
+    """``chunk_rows="auto"``: per-backend calibration drives the chunk
+    size; the calibration is measured once per process and recorded in
+    ``last_stats``."""
+
+    def test_auto_runs_and_records_calibration(self, corpus):
+        runner = FleetRunner()
+        cr = runner.run_campaign(corpus[:48], "tcp", seconds=SECONDS,
+                                 dt=DT, chunk_rows="auto")
+        st = dict(runner.last_stats)
+        assert cr.metrics.shape[0] == 48
+        assert st["auto_chunk"] is True
+        cal = st["calibration"]
+        assert cal["backend"] == "cpu"
+        assert cal["dispatch_us"] > 0 and cal["sync_us"] > 0
+        assert cal["proxy_mflops"] > 0
+        lo, hi = fleet_mod._CALIB_CLAMP.get(
+            cal["backend"], fleet_mod._CALIB_CLAMP_DEFAULT)
+        assert lo <= cal["tick_overhead_flops"] <= hi
+        for t in st["target_chunk_rows"]:
+            assert (fleet_mod.AUTO_CHUNK_MIN <= t
+                    <= fleet_mod.AUTO_CHUNK_MAX)
+
+    def test_auto_matches_materialized(self, corpus):
+        runner = FleetRunner()
+        cr = runner.run_campaign(corpus[:48], "tcp", seconds=SECONDS,
+                                 dt=DT, chunk_rows="auto")
+        oracle = _materialized_metrics(FleetRunner(), corpus[:48], "tcp")
+        np.testing.assert_array_equal(cr.metrics, oracle)
+
+    def test_calibration_cached_per_process(self):
+        a = fleet_mod.calibrate_backend()
+        b = fleet_mod.calibrate_backend()
+        assert a is b
+        assert fleet_mod._default_tick_overhead() == a.tick_overhead_flops
 
 
 class TestFingerprintKnob:
