@@ -274,6 +274,57 @@ def run_dynamics(policy: str = "tcp", seconds: float = SECONDS) -> list[dict]:
     }]
 
 
+def run_reroute(policy: str = "appaware",
+                seconds: float = SECONDS) -> list[dict]:
+    """Mid-run rerouting machinery cost: the *identical* failure-scheduled
+    scenarios once with capacity-only dynamics (the schedule degrades
+    links, routes stay fixed) and once with the precompiled route bank
+    (same schedule, plus the per-tick state stream and the in-scan
+    ``route_bank`` gather). The workload difference is real — rerouted
+    flows move different bytes — but the *machinery* being priced is the
+    banked-gather path itself: the ratio must stay near 1, because the
+    whole design point of precompiling ``[S_r, F, L]`` and streaming a
+    per-tick int32 state index is that mid-run rerouting costs one gather,
+    not a recompile or a ``lax.cond``."""
+    import dataclasses
+
+    scens = link_failure_sweep(n=8, seed=7, reroute=True)
+    sched = compile_fleet(
+        [dataclasses.replace(s, reroute=False) for s in scens])
+    rer = compile_fleet(scens)
+    assert all(s.is_rerouting for s in rer)
+
+    def run_sched():
+        return simulate_many(sched, policy, seconds=seconds, dt=DT)
+
+    def run_rer():
+        return simulate_many(rer, policy, seconds=seconds, dt=DT)
+
+    run_sched(), run_rer()  # compile both paths
+    # interleaved warm reps (see `run`): container drift cancels out of
+    # the ratio instead of biasing it
+    sched_ts, rer_ts = [], []
+    for _ in range(WARM_REPS):
+        t, _ = _wall(run_sched)
+        sched_ts.append(t)
+        t, _ = _wall(run_rer)
+        rer_ts.append(t)
+    t_sched = float(np.median(sched_ts))
+    t_rer = float(np.median(rer_ts))
+    n_states = max(int(np.asarray(s.route_bank).shape[0]) for s in rer)
+    return [{
+        "name": f"fleet_reroute_{policy}",
+        "us_per_call": t_rer * 1e6,
+        "n_scenarios": len(rer),
+        "backend": jax.default_backend(),
+        "sched_warm_s": round(t_sched, 3),
+        "reroute_warm_s": round(t_rer, 3),
+        # ~1: the banked gather is in-scan arithmetic, not a mode switch
+        "reroute_overhead": round(t_rer / max(t_sched, 1e-9), 2),
+        "max_route_states": n_states,
+    }]
+
+
 def run_campaign_bench(policy: str = "tcp", n: int = 256,
                        seconds: float = SECONDS,
                        chunk_rows: int = 64) -> list[dict]:
@@ -466,6 +517,7 @@ def main() -> None:
         rows += run(policy)
     rows += run_dispatch_floor()
     rows += run_dynamics("tcp")
+    rows += run_reroute()
     rows += run_order_cache()
     rows += run_campaign_bench()
     rows += run_campaign_auto()

@@ -90,6 +90,15 @@ CAMPAIGN_FULL_FLOOR = 0.9
 TRANSFER_OVERLAP_SMOKE_FLOOR = 0.05
 TRANSFER_OVERLAP_FULL_FLOOR = 0.2
 
+# Mid-run rerouting machinery ceilings (t_reroute / t_sched on the same
+# failure-scheduled corpus): the precompiled route bank turns mid-run
+# rerouting into one in-scan gather, so the warm ratio sits at ~1.0
+# (measured 0.95 on the loaded 1-core container). The ceiling catches a
+# change that reintroduces a per-state recompile or a lax.cond mode
+# switch — either shows up as a multiple, not a few percent.
+REROUTE_SMOKE_CEIL = 2.0
+REROUTE_FULL_CEIL = 1.5
+
 # 4-emulated-device scaling floors (t_1dev / t_4dev): on a 1-core
 # container the four streams share the core, so anything >= ~0.6 means
 # the shard neither serialized nor duplicated work; multi-core targets
@@ -204,6 +213,26 @@ def check(path: str) -> int:
                 f"fleet_campaign: transfer_overlap {tover:.2f} < floor "
                 f"{tfloor:.2f} (H2D prefetch no longer overlaps — the "
                 f"dispatch thread re-pays every copy)")
+    # mid-run rerouting: the banked in-scan gather must stay cheap
+    rr = by_name.get("fleet_reroute_appaware")
+    rceil = REROUTE_SMOKE_CEIL if smoke else REROUTE_FULL_CEIL
+    if rr is None:
+        failures.append(f"fleet_reroute_appaware: missing from {path}")
+        table.append(("fleet_reroute_appaware", "missing",
+                      f"<= {rceil:.2f}", "-", "MISSING"))
+    else:
+        over = float(rr.get("reroute_overhead", float("inf")))
+        ok = over <= rceil
+        table.append(("fleet_reroute_appaware", f"{over:.2f}",
+                      f"<= {rceil:.2f}",
+                      f"{rr.get('max_route_states')} states",
+                      "ok" if ok else "REGRESSED"))
+        if not ok:
+            failures.append(
+                f"fleet_reroute_appaware: reroute_overhead {over:.2f} > "
+                f"ceiling {rceil:.2f} — the route bank stopped being a "
+                f"cheap in-scan gather (per-state recompile or cond "
+                f"mode switch reintroduced)")
     # sharded chunk stream at 4 emulated devices: within a constant
     # factor of the 1-device run
     sc = by_name.get("fleet_campaign_scaling")

@@ -2,6 +2,7 @@ from repro.net.topology import (  # noqa: F401
     Link,
     LinkKind,
     LinkSchedule,
+    RouteSchedule,
     Topology,
     big_switch,
     diurnal_schedule,

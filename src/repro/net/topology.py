@@ -79,6 +79,35 @@ class Topology:
         path.append(int(self.downlink_idx[dst]))
         return path
 
+    def route_avoiding(self, src: int, dst: int,
+                       down: np.ndarray) -> "list[int] | None":
+        """Shortest path src->dst that avoids ``down`` links ([L] bool).
+
+        Up/down links have no alternates — if either endpoint link is down
+        the flow has no surviving path (returns ``None``). Cross-rack flows
+        choose among cores: every core path has the same hop count, so
+        "shortest surviving" reduces to a core pick, and the existing ECMP
+        choice (``core_for``) is the tie-break — surviving cores are tried
+        in cyclic order starting from it, keeping rerouting deterministic
+        and minimally disruptive (unaffected flows keep their ECMP core).
+        """
+        if src == dst:
+            return []
+        up, dn = int(self.uplink_idx[src]), int(self.downlink_idx[dst])
+        if down[up] or down[dn]:
+            return None
+        r_s, r_d = int(self.rack_of[src]), int(self.rack_of[dst])
+        if self.n_cores > 0 and r_s != r_d:
+            c0 = self.core_for(src, dst)
+            for k in range(self.n_cores):
+                c = (c0 + k) % self.n_cores
+                a = int(self.rack_to_core_idx[r_s, c])
+                b = int(self.core_to_rack_idx[c, r_d])
+                if a >= 0 and b >= 0 and not down[a] and not down[b]:
+                    return [up, a, b, dn]
+            return None
+        return [up, dn]
+
     def routing_matrix(self, flows: Sequence[tuple[int, int]]) -> np.ndarray:
         """Binary R[f, l] = 1 iff flow f traverses link l (eq. 1a)."""
         R = np.zeros((len(flows), self.n_links), dtype=np.float64)
@@ -212,12 +241,117 @@ class LinkSchedule:
                     self.sin_omega[None] * ts[:, None, None]
                     + self.sin_phase[None]), axis=1)
             caps *= 1.0 + wave
+        # Event activity is decided in float32, exactly like the compiled
+        # `_caps_over` path: event times are stored as float32, so deciding
+        # `t >= t0` in float64 flips the half-open [t0, t1) boundary for
+        # any t0/t1 that float32 rounds upward (e.g. t0 = 0.1 — the f64
+        # query 0.1 lands *below* the stored f32 0.10000000149). Comparing
+        # at f32 precision keeps t == t0 active and t == t1 inactive on
+        # both sides for every representable query time.
+        ts32 = ts.astype(np.float32)
         for e in range(self.ev_t0.shape[0]):
-            active = (ts >= self.ev_t0[e]) & (ts < self.ev_t1[e])
+            active = (ts32 >= self.ev_t0[e]) & (ts32 < self.ev_t1[e])
             caps[:, int(self.ev_link[e])] *= np.where(
                 active, float(self.ev_scale[e]), 1.0)
         caps = np.maximum(caps, 0.0)
         return caps[0] if scalar else caps
+
+
+# --------------------------------------------------------------------------
+# mid-run rerouting
+# --------------------------------------------------------------------------
+# A link whose composed event multiplier drops below this is treated as
+# *failed for routing*: the SDN controller reroutes around hard failures
+# (scale 0) and deep brown-outs, but not mild degradations or the smooth
+# sinusoid components (a controller does not flap routes on diurnal load).
+ROUTE_DOWN_THRESHOLD = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteSchedule:
+    """Precompiled mid-run rerouting: ``R(t)`` as a bank of route states.
+
+    The event schedule partitions time into intervals on which the set of
+    active events — hence the set of routing-failed links — is constant.
+    Each distinct failed-link combination is one *route state* with its own
+    rerouted routing matrix; the number of states is bounded by the number
+    of event boundaries (≤ 2·E + 1, typically 2–4), so the whole bank
+    precompiles into one ``[S_r, F, L]`` operand the simulator gathers from
+    inside the scan — no recompilation, no ``lax.cond``.
+
+    Flows with no surviving path keep their dead base route (they move no
+    bytes through a hard-failed link, exactly like today's capacity-only
+    failures); everything else takes the shortest surviving path with the
+    ECMP core pick as tie-break (see :meth:`Topology.route_avoiding`).
+    """
+
+    t0: np.ndarray      # [K] f32 interval start times, t0[0] == 0.0
+    state: np.ndarray   # [K] int32 route-state index per interval
+    routes: np.ndarray  # [S, F, L] f32 binary routing matrix per state
+    down: np.ndarray    # [S, L] bool, links treated as failed per state
+
+    @property
+    def n_states(self) -> int:
+        return self.routes.shape[0]
+
+    @property
+    def n_intervals(self) -> int:
+        return self.t0.shape[0]
+
+    @classmethod
+    def from_events(cls, topo: "Topology",
+                    flows: Sequence[tuple[int, int]],
+                    schedule: "LinkSchedule",
+                    threshold: float = ROUTE_DOWN_THRESHOLD,
+                    ) -> "RouteSchedule":
+        """Enumerate reachable route states from ``schedule``'s events."""
+        F, L = len(flows), topo.n_links
+        base_R = topo.routing_matrix(flows).astype(np.float32)
+        t0e = np.asarray(schedule.ev_t0, np.float32)
+        t1e = np.asarray(schedule.ev_t1, np.float32)
+        bounds = np.concatenate([[0.0], t0e[np.isfinite(t0e)],
+                                 t1e[np.isfinite(t1e)]]).astype(np.float32)
+        bounds = np.unique(bounds[bounds >= 0.0])
+        key_to_state: dict[bytes, int] = {}
+        state_of, routes_list, down_list = [], [], []
+        for tb in bounds:
+            # same f32 half-open [t0, t1) activity rule as caps_at/_caps_over
+            active = (tb >= t0e) & (tb < t1e)
+            scale = np.ones(L, np.float64)
+            for e in np.flatnonzero(active):
+                scale[int(schedule.ev_link[e])] *= float(schedule.ev_scale[e])
+            dwn = scale < threshold
+            key = dwn.tobytes()
+            if key not in key_to_state:
+                key_to_state[key] = len(routes_list)
+                R = base_R.copy()
+                for f, (s, d) in enumerate(flows):
+                    p = topo.route_avoiding(s, d, dwn)
+                    if p is not None:
+                        R[f] = 0.0
+                        R[f, p] = 1.0
+                routes_list.append(R)
+                down_list.append(dwn)
+            state_of.append(key_to_state[key])
+        return cls(
+            t0=bounds.astype(np.float32),
+            state=np.asarray(state_of, np.int32),
+            routes=np.stack(routes_list).astype(np.float32),
+            down=np.stack(down_list),
+        )
+
+    # ---- host-side evaluation (numpy reference) ----------------------
+    def state_at(self, t) -> int:
+        """Route-state index active at time ``t`` (f32 comparison, matching
+        the compiled per-tick state stream)."""
+        t32 = np.float32(t)
+        j = int(np.sum(t32 >= self.t0)) - 1
+        return int(self.state[max(j, 0)])
+
+    def routes_at(self, t) -> np.ndarray:
+        """Routing matrix [F, L] active at time ``t`` (numpy reference for
+        the compiled in-scan gather)."""
+        return self.routes[self.state_at(t)]
 
 
 def link_failure_schedule(topo: "Topology", link_ids, t_fail: float,

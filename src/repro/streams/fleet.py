@@ -312,6 +312,11 @@ class FleetShape:
     # so static and scheduled scenarios batch together exactly.
     n_sins: int = 0
     n_events: int = 0
+    # route-bank axis (S_r): 0 = static routing. A static-routing scenario
+    # padded into a rerouting bucket gets its base R staged into bank slot
+    # 0 with never-activating intervals, so its per-tick gather returns
+    # exactly its static routing matrix.
+    n_route_states: int = 0
 
     @classmethod
     def cover(cls, sims: Sequence[CompiledSim]) -> "FleetShape":
@@ -323,6 +328,7 @@ class FleetShape:
             n_apps=max(s.n_apps for s in sims),
             n_sins=max(s.sin_amp.shape[0] for s in sims),
             n_events=max(s.ev_t0.shape[0] for s in sims),
+            n_route_states=max(s.route_bank.shape[0] for s in sims),
         )
 
     def merge(self, other: "FleetShape") -> "FleetShape":
@@ -335,7 +341,8 @@ def _sim_shape(sim: CompiledSim) -> FleetShape:
     return FleetShape(
         n_flows=sim.R.shape[0], n_links=sim.R.shape[1],
         n_insts=sim.M_in.shape[0], n_apps=sim.n_apps,
-        n_sins=sim.sin_amp.shape[0], n_events=sim.ev_t0.shape[0])
+        n_sins=sim.sin_amp.shape[0], n_events=sim.ev_t0.shape[0],
+        n_route_states=sim.route_bank.shape[0])
 
 
 def _sim_content_sig(sim: CompiledSim) -> int:
@@ -388,6 +395,12 @@ def _flop_cost(shape: FleetShape, policy: str = "tcp") -> float:
         # overhead genuinely dominates.
         base += 3.0 * F * L + 8.0 * L + 4.0 * shape.n_sins * L \
             + 4.0 * shape.n_events
+    if shape.n_route_states > 0:
+        # mid-run rerouting: the per-tick [F, L] bank gather plus the
+        # interval lookup. Static scenarios merged into a rerouting bucket
+        # pay this too (their base R rides bank slot 0), so the planner
+        # weighs the mix like it does the schedule machinery.
+        base += 2.0 * F * L + 4.0 * shape.n_route_states
     if policy in ("tcp", "appfair"):
         base += 3.0 * 2.0 * (F + 1.0) * F * 2.0 * L
     elif policy == "appaware":
@@ -500,6 +513,32 @@ def _pad2(a, n0, n1):
     return np.pad(a, ((0, max(p0, 0)), (0, max(p1, 0))))
 
 
+def _pad_route_fields(sim: CompiledSim, F: int, L: int,
+                      SR: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad the route-bank family to ``SR`` states.
+
+    A static-routing sim (S_r = 0) entering a rerouting shape stages its
+    base R into bank slot 0 with all intervals at t = +inf: the per-tick
+    state lookup clamps to interval 0 → state 0 → exactly the static
+    routing matrix, so the gathered values equal ``sim.R`` on every tick.
+    A rerouting sim pads with never-selected zero states / inert
+    intervals.
+    """
+    sr0 = sim.route_bank.shape[0]
+    bank = np.zeros((SR, F, L), np.float32)
+    t = np.full((SR,), np.inf, np.float32)
+    state = np.zeros((SR,), np.int32)
+    if sr0 == 0:
+        if SR > 0:
+            bank[0] = _pad2(np.asarray(sim.R, np.float32), F, L)
+    else:
+        b = np.asarray(sim.route_bank, np.float32)
+        bank[:sr0, :b.shape[1], :b.shape[2]] = b
+        t[:sr0] = np.asarray(sim.route_t, np.float32)
+        state[:sr0] = np.asarray(sim.route_state, np.int32)
+    return bank, t, state
+
+
 def pad_sim(sim: CompiledSim, shape: FleetShape,
             tuples_per_mb: float | None = None) -> CompiledSim:
     """Zero-pad ``sim`` to ``shape`` without changing its dynamics.
@@ -514,6 +553,8 @@ def pad_sim(sim: CompiledSim, shape: FleetShape,
     if sim.n_apps > A:
         raise ValueError(f"cannot pad n_apps {sim.n_apps} down to {A}")
     f = False
+    route_bank, route_t, route_state = _pad_route_fields(
+        sim, F, L, shape.n_route_states)
     return CompiledSim(
         R=_pad2(sim.R, F, L),
         caps=_pad1(sim.caps, L, _PAD_CAP),
@@ -545,6 +586,9 @@ def pad_sim(sim: CompiledSim, shape: FleetShape,
         ev_t1=_pad1(sim.ev_t1, E, np.inf),
         ev_link=_pad1(sim.ev_link, E, 0),
         ev_scale=_pad1(sim.ev_scale, E, 1.0),
+        route_bank=route_bank,
+        route_t=route_t,
+        route_state=route_state,
     )
 
 
@@ -596,6 +640,13 @@ _FIELD_SPECS: dict[str, tuple[tuple[str, ...], float]] = {
     "ev_t1": (("E",), np.inf),
     "ev_link": (("E",), 0),
     "ev_scale": (("E",), 1.0),
+    # route bank: pad states are all-zero (never selected) and pad
+    # intervals never activate; static-routing members of a rerouting
+    # bucket get their base R written into slot 0 by the staging fill
+    # (see _fill_bucket / _pad_route_fields)
+    "route_bank": (("SR", "F", "L"), 0.0),
+    "route_t": (("SR",), np.inf),
+    "route_state": (("SR",), 0),
 }
 
 
@@ -750,7 +801,8 @@ class FleetRunner:
         staging cache and the campaign ping/pong slots."""
         dims = {"F": shape.n_flows, "L": shape.n_links,
                 "I": shape.n_insts,
-                "S": shape.n_sins, "E": shape.n_events}
+                "S": shape.n_sins, "E": shape.n_events,
+                "SR": shape.n_route_states}
         for field, (axes, pad) in _FIELD_SPECS.items():
             first = np.asarray(getattr(sims[0], field))
             full = (rows,) + tuple(dims[a] for a in axes)
@@ -762,6 +814,15 @@ class FleetRunner:
             for b, s in enumerate(sims):
                 a = np.asarray(getattr(s, field))
                 buf[(b, *map(lambda n: slice(0, n), a.shape))] = a
+        if shape.n_route_states > 0:
+            # static-routing members of a rerouting bucket: their per-tick
+            # state lookup clamps to slot 0, which must hold their base R
+            # (all-zero pad rows would route nothing)
+            bank = bufs["route_bank"]
+            for b, s in enumerate(sims):
+                if s.route_bank.shape[0] == 0:
+                    a = np.asarray(s.R)
+                    bank[b, 0, :a.shape[0], :a.shape[1]] = a
         return {field: bufs[field] for field in _FIELD_SPECS}
 
     def _stack_bucket(self, sims: list[CompiledSim], shape: FleetShape,

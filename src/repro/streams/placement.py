@@ -34,9 +34,20 @@ def traffic_aware(graph: InstanceGraph, n_machines: int,
     """Greedy T-Storm-like heuristic [11]: repeatedly co-locate the endpoints
     of the heaviest flow, subject to a per-machine instance cap. Minimizes
     external traffic; the paper argues this is orthogonal to (and still
-    needs) bandwidth allocation."""
+    needs) bandwidth allocation.
+
+    The cap binds on *every* placement: each fallback picks the
+    least-loaded machine **under cap** (a bare ``argmin(load)`` silently
+    exceeded a user-supplied ``cap_per_machine`` once every machine it
+    preferred was full). An infeasible cap (``cap · n_machines <
+    n_instances``) raises instead of over-packing quietly.
+    """
     I = graph.n_instances
-    cap = cap_per_machine or -(-I // n_machines)
+    cap = -(-I // n_machines) if cap_per_machine is None else cap_per_machine
+    if cap * n_machines < I:
+        raise ValueError(
+            f"cap_per_machine={cap} cannot place {I} instances on "
+            f"{n_machines} machines")
     # estimated flow volumes: propagate generation through selectivities
     vol = _steady_state_flow_volume(graph)
     order = np.argsort(-vol, kind="stable")
@@ -47,23 +58,27 @@ def traffic_aware(graph: InstanceGraph, n_machines: int,
         machine[i] = m
         load[m] += 1
 
+    def least_loaded_under_cap() -> int:
+        open_m = np.flatnonzero(load < cap)
+        return int(open_m[np.argmin(load[open_m])])
+
     for f in order:
         s, d = int(graph.src_of_flow[f]), int(graph.dst_of_flow[f])
         ms, md = machine[s], machine[d]
         if ms < 0 and md < 0:
-            m = int(np.argmin(load))
+            m = least_loaded_under_cap()
             place(s, m)
             if load[m] < cap:
                 place(d, m)
             else:
-                place(d, int(np.argmin(load)))
+                place(d, least_loaded_under_cap())
         elif ms < 0:
-            place(s, md if load[md] < cap else int(np.argmin(load)))
+            place(s, md if load[md] < cap else least_loaded_under_cap())
         elif md < 0:
-            place(d, ms if load[ms] < cap else int(np.argmin(load)))
+            place(d, ms if load[ms] < cap else least_loaded_under_cap())
     for i in range(I):
         if machine[i] < 0:
-            place(i, int(np.argmin(load)))
+            place(i, least_loaded_under_cap())
     return machine
 
 

@@ -70,10 +70,11 @@ class Scenario:
     topo: Topology
     placement: np.ndarray
     schedule: LinkSchedule | None = None   # in-run capacity dynamics
+    reroute: bool = False                  # SDN rerouting around failures
 
     def compile(self) -> CompiledSim:
         return compile_sim(self.graph, self.topo, self.placement,
-                           schedule=self.schedule)
+                           schedule=self.schedule, reroute=self.reroute)
 
 
 def compile_fleet(scenarios: list[Scenario]) -> list[CompiledSim]:
@@ -164,7 +165,8 @@ def capacity_sweep(caps: dict[str, float] = PAPER_CAPS_MBPS,
 def link_failure_sweep(n: int = 6, seed: int = 0, fail_frac: float = 0.25,
                        degrade: float = 0.1, cap: float = 1.875,
                        in_run: bool = False, t_fail: float = 60.0,
-                       t_recover: float = 90.0) -> list[Scenario]:
+                       t_recover: float = 90.0,
+                       reroute: bool = False) -> list[Scenario]:
     """Seed workloads on a fat-tree with a random ``fail_frac`` of links
     degraded to ``degrade``× capacity — does the allocator route value
     (not just bytes) around brown-outs?
@@ -173,13 +175,29 @@ def link_failure_sweep(n: int = 6, seed: int = 0, fail_frac: float = 0.25,
     steady-state form — kept as the parity oracle for the scheduled path).
     ``in_run=True``: links fail at ``t_fail`` and recover at ``t_recover``
     *inside* the run, so the result traces the controller's transient
-    (dip depth / recovery time, the paper's Fig. 5/12 regime)."""
+    (dip depth / recovery time, the paper's Fig. 5/12 regime).
+    ``reroute=True`` (implies ``in_run``): the SDN controller additionally
+    *reroutes* around the failure via a precompiled route bank
+    (:class:`~repro.net.topology.RouteSchedule`); failures are drawn from
+    the internal links only, so a surviving alternate core path exists —
+    the regime where rerouting (not just re-allocating) pays."""
     rng = np.random.default_rng(seed)
     out = []
     for k in range(n):
         app_name = ("TT", "TI")[k % 2]
         g = parallelize(_SEED_APPS[app_name](), seed=seed)
         topo = fat_tree(up=12.5).set_capacity(LinkKind.INTERNAL, cap)
+        if reroute:
+            internal = np.flatnonzero(topo.link_kinds == int(LinkKind.INTERNAL))
+            n_fail = max(1, int(fail_frac * internal.size))
+            failed = rng.choice(internal, size=n_fail, replace=False)
+            sched = link_failure_schedule(topo, failed, t_fail, t_recover,
+                                          degrade)
+            out.append(Scenario(
+                f"{app_name}_failreroute{k}", g, topo,
+                round_robin(g, topo.n_machines), schedule=sched,
+                reroute=True))
+            continue
         n_fail = max(1, int(fail_frac * topo.n_links))
         failed = rng.choice(topo.n_links, size=n_fail, replace=False)
         if in_run:

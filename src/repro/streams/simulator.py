@@ -49,7 +49,7 @@ from repro.core.multiapp import (
     strict_priority_alloc,
 )
 from repro.core.tcp import maxmin_fused_step, maxmin_order_init
-from repro.net.topology import LinkSchedule, Topology
+from repro.net.topology import LinkSchedule, RouteSchedule, Topology
 from repro.streams.app import InstanceGraph, source_sink_paths
 
 _EPS = 1e-9
@@ -86,6 +86,7 @@ def metric_index(name: str) -> int:
         "path_w", "app_of_flow", "app_of_inst",
         "sin_amp", "sin_omega", "sin_phase",
         "ev_t0", "ev_t1", "ev_link", "ev_scale",
+        "route_bank", "route_t", "route_state",
     ),
 )
 @dataclasses.dataclass
@@ -130,13 +131,27 @@ class CompiledSim:
     ev_t1: Any           # [E]
     ev_link: Any         # [E] int32
     ev_scale: Any        # [E]
+    # mid-run rerouting bank (see repro.net.topology.RouteSchedule):
+    # S_r = 0 means static routing and the simulator skips the per-tick
+    # state stream and bank gather by shape. ``route_t``/``route_state``
+    # share the S_r axis with the bank (S_r = max(states, intervals)):
+    # padded interval slots never activate (t0 = inf) and padded bank
+    # states are never indexed. Only R is banked: rerouting re-picks
+    # *links*, never flow endpoints, so the per-flow fields derived from
+    # the instance graph (src_of_flow / w_of_flow / path_w) and
+    # ``has_links`` (dead routes are retained, not dropped) are
+    # route-state-invariant.
+    route_bank: Any      # [S_r, F, L] routing matrix per route state
+    route_t: Any         # [S_r] interval start times (inf = padding)
+    route_state: Any     # [S_r] int32 state index per interval
 
     @property
     def program(self) -> LinkProgram:
         return LinkProgram(R=self.R, capacity=self.caps, kind=self.kinds)
 
-    def program_at(self, caps_t) -> LinkProgram:
-        return LinkProgram(R=self.R, capacity=caps_t, kind=self.kinds)
+    def program_at(self, caps_t, R=None) -> LinkProgram:
+        return LinkProgram(R=self.R if R is None else R,
+                           capacity=caps_t, kind=self.kinds)
 
     @property
     def is_dynamic(self) -> bool:
@@ -146,6 +161,14 @@ class CompiledSim:
         on the same definition."""
         return self.sin_amp.shape[0] > 0 or self.ev_t0.shape[0] > 0
 
+    @property
+    def is_rerouting(self) -> bool:
+        """Whether a route bank is attached — the same kind of *shape*
+        predicate as :attr:`is_dynamic`: S_r = 0 sims never stream a state
+        index or gather from the bank, so static-routing runs are bitwise
+        the pre-reroute path."""
+        return self.route_bank.shape[0] > 0
+
 
 def compile_sim(
     graph: InstanceGraph,
@@ -154,7 +177,15 @@ def compile_sim(
     app_of_inst: np.ndarray | None = None,
     n_apps: int = 1,
     schedule: LinkSchedule | None = None,
+    reroute: "bool | RouteSchedule" = False,
 ) -> CompiledSim:
+    """Compile one scenario. ``reroute=True`` derives a
+    :class:`~repro.net.topology.RouteSchedule` from ``schedule``'s events
+    (the SDN controller reprograms routes around failed links mid-run); an
+    explicit ``RouteSchedule`` is used as-is. A schedule whose events never
+    change the route set collapses to a single state and compiles exactly
+    like ``reroute=False`` — the bank stays empty (S_r = 0) and the run is
+    bitwise the static-routing path."""
     flows = graph.flow_pairs(machine_of_inst)
     R = topo.routing_matrix(flows)
     M_in = graph.in_matrix()
@@ -213,6 +244,34 @@ def compile_sim(
         raise ValueError(
             f"schedule event links {ev_link} out of range for "
             f"{topo.n_links} links")
+    F, L = len(flows), topo.n_links
+    if reroute is True:
+        reroute = RouteSchedule.from_events(topo, flows, schedule)
+    if isinstance(reroute, RouteSchedule):
+        if reroute.routes.shape[1:] != (F, L):
+            raise ValueError(
+                f"route schedule is [{reroute.routes.shape[1]} flows, "
+                f"{reroute.routes.shape[2]} links]; scenario has "
+                f"[{F}, {L}]")
+        if reroute.n_states > 1:
+            # single shared S_r axis for bank + interval arrays: padded
+            # intervals never activate, padded bank states never indexed
+            sr = max(reroute.n_states, reroute.n_intervals)
+            route_bank = np.zeros((sr, F, L), np.float32)
+            route_bank[:reroute.n_states] = reroute.routes
+            route_t = np.full((sr,), np.inf, np.float32)
+            route_t[:reroute.n_intervals] = reroute.t0
+            route_state = np.zeros((sr,), np.int32)
+            route_state[:reroute.n_intervals] = reroute.state
+        else:
+            # one reachable state == static routing: skip by shape
+            route_bank = np.zeros((0, F, L), np.float32)
+            route_t = np.zeros((0,), np.float32)
+            route_state = np.zeros((0,), np.int32)
+    else:
+        route_bank = np.zeros((0, F, L), np.float32)
+        route_t = np.zeros((0,), np.float32)
+        route_state = np.zeros((0,), np.int32)
     f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
     return CompiledSim(
         R=f32(R),
@@ -245,7 +304,25 @@ def compile_sim(
         ev_t1=f32(schedule.ev_t1),
         ev_link=jnp.asarray(schedule.ev_link, jnp.int32),
         ev_scale=f32(schedule.ev_scale),
+        route_bank=f32(route_bank),
+        route_t=f32(route_t),
+        route_state=jnp.asarray(route_state, jnp.int32),
     )
+
+
+def _route_states_over(sim: CompiledSim, ts: jnp.ndarray) -> jnp.ndarray:
+    """Per-tick route-state index [T] — the routing analogue of
+    ``_caps_over``: evaluated once per run outside the scan and streamed
+    as ``xs``, so selecting the active route state costs one [F, L] gather
+    per tick, never a recompile or a ``lax.cond``.
+
+    Piecewise-constant lookup: tick t takes the last interval whose start
+    time is ≤ t. Padded interval slots start at +inf (never counted) and
+    all-padding rows (a static scenario packed into a rerouting bucket)
+    clamp to interval 0, whose bank slot holds that scenario's base R.
+    """
+    j = jnp.sum(ts[:, None] >= sim.route_t[None, :], axis=1) - 1
+    return sim.route_state[jnp.maximum(j, 0)]
 
 
 def _caps_over(sim: CompiledSim, ts: jnp.ndarray) -> jnp.ndarray:
@@ -295,6 +372,17 @@ def _metrics_epilogue(sink, wait, load, caps_grid, path_w, dt: float,
     Runs under the fleet vmap on padded shapes: padded flows wait 0 s with
     zero ``path_w`` weight, padded links carry zero load against huge
     capacity, so padding never moves a metric.
+
+    Known ULP-level sensitivity: ``sink.sum()`` (the ``total_sink_mb``
+    entry) is the epilogue's only full-length un-normalized reduction, and
+    XLA re-associates its reduction tree when the batch axis is
+    SPMD-sharded (a 4-device ``run`` lowers a different tree for the
+    per-device row count than the unsharded bucket). Trajectories and
+    every other metric are bitwise under sharding; a regression test pins
+    the drift to this one op at a couple of ULP
+    (``tests/test_multidevice.py``). Not "fixed" by a
+    sequential accumulator on purpose — that would change the unsharded
+    value and break bitwise continuity of existing static-fleet results.
     """
     T = sink.shape[0]
     warm = T // 4
@@ -351,7 +439,8 @@ def _metrics_epilogue(sink, wait, load, caps_grid, path_w, dt: float,
 # --------------------------------------------------------------------------
 # one simulation tick (shared by all policies)
 # --------------------------------------------------------------------------
-def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap, caps_t=None, enforce=True):
+def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap, caps_t=None, enforce=True,
+          R_t=None):
     """One fluid step against the *current* link capacities ``caps_t``.
 
     Fused dispatch chain: ``M_in`` and ``w_out`` have exactly one nonzero
@@ -372,7 +461,14 @@ def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap, caps_t=None, enforce=True):
     but re-rounded scaled loads. This is what lets brute-force ``x_fixed``
     studies (whose rate vectors are deliberately link-infeasible) share
     buckets with scheduled scenarios.
+
+    ``R_t`` is the tick's active routing matrix when a route bank is
+    attached (``None`` — the common case — reads ``sim.R``, leaving the
+    static-routing trace untouched). Transfers load the links of the
+    *current* routes: the SDN controller has already reprogrammed the
+    switches, whatever the policy's stale rate vector was solved against.
     """
+    R = sim.R if R_t is None else R_t
     dst, src = sim.dst_of_flow, sim.src_of_flow
 
     # receiver-window flow control: never overflow the receive buffer
@@ -388,12 +484,12 @@ def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap, caps_t=None, enforce=True):
         # updates a failed/shrunk link moves at most caps_t·dt, whatever
         # the stale rate vector says. Feasible loads scale by exactly 1.0,
         # so a constant schedule reproduces the static path.
-        load0 = desired @ sim.R                                  # [L] MB
+        load0 = desired @ R                                      # [L] MB
         lscale = jnp.where(load0 > caps_t * dt,
                            jnp.clip(caps_t * dt / jnp.maximum(load0, _EPS),
                                     0.0, 1.0),
                            1.0)
-        fscale = jnp.min(jnp.where(sim.R > 0, lscale[None, :], jnp.inf),
+        fscale = jnp.min(jnp.where(R > 0, lscale[None, :], jnp.inf),
                          axis=1)
         fscale = jnp.where(jnp.isfinite(fscale), fscale, 1.0)
         if enforce is not True:
@@ -466,14 +562,14 @@ def _tick(sim: CompiledSim, Qs, Qr, x, dt, qcap, caps_t=None, enforce=True):
         Qs / jnp.maximum(x, _EPS) + Qr / jnp.maximum(drain, _EPS), _LAT_CAP
     )
 
-    link_load = transfer @ sim.R / dt                            # [L] MB/s
+    link_load = transfer @ R / dt                                # [L] MB/s
     return Qs, Qr, transfer, drain, (sink_mb, sink_mb_app, wait, link_load)
 
 
 # --------------------------------------------------------------------------
 # policies
 # --------------------------------------------------------------------------
-def _tcp_rates(sim: CompiledSim, caps_t, Qs, Qr, prod_rate, drain_ewma,
+def _tcp_rates(sim: CompiledSim, R, caps_t, Qs, Qr, prod_rate, drain_ewma,
                dt, qcap, order_carry):
     # sender-side demand, clamped by the receiver window (rwnd): a flow whose
     # receive buffer is full only demands its drain rate — real TCP frees the
@@ -489,14 +585,14 @@ def _tcp_rates(sim: CompiledSim, caps_t, Qs, Qr, prod_rate, drain_ewma,
     # machinery on an actual order change — bitwise-identical output either
     # way (see repro.core.tcp.maxmin_fused_step).
     x, order_carry, rebuilt = maxmin_fused_step(
-        sim.R, caps_t, demand, order_carry)
+        R, caps_t, demand, order_carry)
     x = jnp.where(sim.has_links, jnp.minimum(x, demand), INTERNAL_RATE)
     return x, order_carry, rebuilt
 
 
-def _appaware_rates(sim: CompiledSim, caps_t, state: FlowState, dt_alloc,
+def _appaware_rates(sim: CompiledSim, R, caps_t, state: FlowState, dt_alloc,
                     backfill_iters=8, solver: str = "sort"):
-    x = allocate(sim.program_at(caps_t), state, dt=dt_alloc,
+    x = allocate(sim.program_at(caps_t, R=R), state, dt=dt_alloc,
                  backfill_iters=backfill_iters, solver=solver)
     return jnp.where(sim.has_links, x, INTERNAL_RATE)
 
@@ -652,22 +748,28 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
     # trajectory output entirely — the static path costs what it did
     # before in-run dynamics existed
     dynamic = sim.is_dynamic
-    if dynamic:
+    rerouting = sim.is_rerouting
+    if dynamic or rerouting:
         ts = jnp.arange(n_ticks, dtype=jnp.float32) * dt
+    if dynamic:
         caps_sched = _caps_over(sim, ts)              # [T, L]
     else:
         caps_sched = jnp.zeros((0, sim.caps.shape[0]), jnp.float32)
+    # per-tick route-state stream (S_r > 0 only): the scan gathers the
+    # active state's routing matrix from the precompiled bank — mid-run
+    # rerouting without recompilation or lax.cond
+    states_seq = _route_states_over(sim, ts) if rerouting else None
 
     no_rebuild = jnp.zeros((), bool)
 
-    def policy_rates(caps_t, Qs, Qr, B, prod_rate, drain_ewma, v_acc,
+    def policy_rates(R_upd, caps_t, Qs, Qr, B, prod_rate, drain_ewma, v_acc,
                      ls, lr, mu, oc):
         """→ (rates, order_carry', rebuilt). Only tcp threads a real order
         carry; the rest pass ``oc`` through untouched (an empty tuple, so
         the scan carry stays policy-minimal — statically gated below)."""
         if policy == "tcp":
-            return _tcp_rates(sim, caps_t, Qs, Qr, prod_rate, drain_ewma,
-                              dt, qcap, oc)
+            return _tcp_rates(sim, R_upd, caps_t, Qs, Qr, prod_rate,
+                              drain_ewma, dt, qcap, oc)
         if policy == "fixed":
             x = jnp.where(sim.has_links, x_fixed, INTERNAL_RATE)
         elif policy == "appaware":
@@ -675,12 +777,12 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
             # B (bytes transferred but not yet joined — stale drops still
             # count as backlog: the paper's memory-overrun signal, Fig. 5)
             st = FlowState(ls_t=ls, lr_t=lr, v=v_acc, ls_t1=Qs, lr_t1=B)
-            x = _appaware_rates(sim, caps_t, st, dt * upd_every,
+            x = _appaware_rates(sim, R_upd, caps_t, st, dt * upd_every,
                                 solver=solver)
         elif policy == "appfair":
             prio = group_by_throughput(mu, n_groups)
             x = strict_priority_alloc(
-                sim.R, caps_t, sim.app_of_flow, prio, n_groups=n_groups
+                R_upd, caps_t, sim.app_of_flow, prio, n_groups=n_groups
             )
             x = jnp.where(sim.has_links, x, INTERNAL_RATE)
         else:
@@ -688,16 +790,22 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
         return x, oc, no_rebuild
 
     def body(carry, xs):
-        tick, caps_t = xs
+        tick, caps_t, state_t = xs
         (Qs, Qr, B, x, v_acc, ls, lr, prod_rate, drain_ewma, mu,
          mu_acc, oc) = carry
         caps_upd = sim.caps if caps_t is None else caps_t
+        # active routing matrix: one [F, L] bank gather per tick. The
+        # policies re-solve against R(t_upd) at their update ticks, so
+        # appaware/tcp shift traffic off failed links as soon as their
+        # controller interval fires.
+        R_t = None if state_t is None else sim.route_bank[state_t]
+        R_upd = sim.R if R_t is None else R_t
 
         def updated(_):
             mu_new = (ewma_throughput(mu, mu_acc / (dt * upd_every), alpha)
                       if policy == "appfair" else mu)
             x_new, oc_new, reb = policy_rates(
-                caps_upd, Qs, Qr, B, prod_rate, drain_ewma,
+                R_upd, caps_upd, Qs, Qr, B, prod_rate, drain_ewma,
                 v_acc, ls, lr, mu_new, oc)
             return (x_new, z, Qs, B, mu_new, jnp.zeros_like(mu_acc),
                     oc_new, reb)
@@ -715,7 +823,8 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
                 do_upd, updated, kept, None)
 
         Qs1, Qr1, transfer, drain, (sink, sink_app, wait, load) = _tick(
-            sim, Qs, Qr, x, dt, qcap, caps_t=caps_t, enforce=enforce)
+            sim, Qs, Qr, x, dt, qcap, caps_t=caps_t, enforce=enforce,
+            R_t=R_t)
         # per-policy carry pieces are gated *statically*: a policy that
         # never reads prod_rate/B/mu_acc doesn't pay their per-tick ops
         if policy == "tcp":
@@ -740,8 +849,9 @@ def _run(sim: CompiledSim, policy: str, n_ticks: int, dt: float,
     # did before the order cache existed
     oc0 = maxmin_order_init(F) if policy == "tcp" else ()
     carry0 = (z, z, z, z, z, z, z, z, z, mu0, mu0, oc0)
-    # None is an empty pytree leaf: static sims stream no capacity xs
-    xs = (jnp.arange(n_ticks), caps_sched if dynamic else None)
+    # None is an empty pytree leaf: static sims stream no capacity xs and
+    # static-routing sims stream no state index
+    xs = (jnp.arange(n_ticks), caps_sched if dynamic else None, states_seq)
     _, ys = jax.lax.scan(body, carry0, xs)
     if not with_metrics:
         return (*ys, caps_sched)

@@ -74,6 +74,53 @@ class TestScheduleEvaluation:
         caps = sched.caps_at(topo.capacities, np.array([2.0, 7.0, 12.0]))
         np.testing.assert_allclose(caps[:, 0], [2.0, 1.0, 4.0], rtol=1e-6)
 
+    # times whose float32 rounding moves them: the f64-vs-f32 comparison
+    # mismatch at t == t0 / t == t1 is exactly what the boundary fix pinned
+    _BOUNDARY_TIMES = [(0.1, 0.3), (1.0 / 3.0, 2.0 / 3.0), (20.0, 40.0)]
+
+    @pytest.mark.parametrize("t0,t1", _BOUNDARY_TIMES)
+    def test_boundary_time_parity(self, t0, t1):
+        """Half-open [t0, t1) exactly at the boundaries, numpy == compiled.
+
+        ``caps_at`` used to upcast the query time to float64 while the
+        stored event times stay float32: for any t0 that f32 rounds
+        *upward* (0.1, 1/3, …) the f64 query t == t0 landed below the
+        stored boundary, so the oracle said inactive at the event's own
+        start time while the compiled f32 path said active (and the
+        mirror image at t1). Both sides now decide activity at f32.
+        """
+        g = parallelize(trending_topics(), seed=0)
+        topo = big_switch(8, 1.25)
+        sched = LinkSchedule.empty(topo.n_links).with_event(
+            [2], t0, t1, scale=0.25)
+        sim = compile_sim(g, topo, round_robin(g, 8), schedule=sched)
+        eps = 1e-3
+        ts = np.array([t0 - eps, t0, t1, t1 + eps], np.float32)
+        caps_np = sched.caps_at(topo.capacities, ts)
+        caps_jax = np.asarray(_caps_over(sim, jnp.asarray(ts)))
+        np.testing.assert_array_equal(caps_jax, caps_np.astype(np.float32))
+        # the half-open contract itself: active at t0, inactive at t1
+        assert caps_np[1, 2] == pytest.approx(1.25 * 0.25)
+        assert caps_np[0, 2] == pytest.approx(1.25)
+        assert caps_np[2, 2] == pytest.approx(1.25)
+
+    def test_overlap_composition_parity_at_boundaries(self):
+        """Overlapping same-link events compose multiplicatively on both
+        sides, including exactly at each event's boundary ticks."""
+        g = parallelize(trending_topics(), seed=0)
+        topo = big_switch(8, 2.0)
+        sched = (LinkSchedule.empty(topo.n_links)
+                 .with_event([4], 0.1, 0.7, scale=0.5)
+                 .with_event([4], 0.3, 0.9, scale=0.5))
+        sim = compile_sim(g, topo, round_robin(g, 8), schedule=sched)
+        ts = np.array([0.0, 0.1, 0.2, 0.3, 0.5, 0.7, 0.8, 0.9], np.float32)
+        caps_np = sched.caps_at(topo.capacities, ts)
+        caps_jax = np.asarray(_caps_over(sim, jnp.asarray(ts)))
+        np.testing.assert_array_equal(caps_jax, caps_np.astype(np.float32))
+        np.testing.assert_allclose(
+            caps_np[:, 4], [2.0, 1.0, 1.0, 0.5, 0.5, 1.0, 1.0, 2.0],
+            rtol=1e-6)
+
     def test_schedule_link_count_mismatch_rejected(self):
         g = parallelize(trending_topics(), seed=0)
         with pytest.raises(ValueError, match="links"):

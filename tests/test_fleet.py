@@ -241,8 +241,9 @@ class TestConservationThroughFusedSolver:
         for t in range(60):  # 30 s: failure at 10 s, recovery at 20 s
             caps_t = jnp.asarray(sched.caps_at(base, t * DT), jnp.float32)
             # the real tcp policy step: demand-clamped fused max-min with
-            # the demand-order carry threaded tick to tick
-            x, oc, _ = _tcp_rates(sim, caps_t, Qs, Qr, prod_rate,
+            # the demand-order carry threaded tick to tick (static routing:
+            # the active R is just sim.R)
+            x, oc, _ = _tcp_rates(sim, sim.R, caps_t, Qs, Qr, prod_rate,
                                   drain_ewma, DT, qcap, oc)
             Qs, Qr, transfer, drain, (sink, _, _, load) = _tick(
                 sim, Qs, Qr, x, DT, qcap, caps_t=caps_t)

@@ -1,0 +1,281 @@
+"""Mid-run SDN rerouting: the precompiled route-matrix bank.
+
+Covers the PR 9 acceptance bar: route-state enumeration from an event
+schedule (bounded by event boundaries), the numpy ``routes_at(t)`` oracle
+vs the compiled in-scan gather over a tick grid with chunk-straddling
+events, fleet/campaign parity for all four policies, the bitwise
+static-path guarantee (a single-state schedule compiles exactly like
+``reroute=False``), and the cross-layer claim — app-aware allocation *with*
+rerouting beats app-aware *without* rerouting after a core failure with a
+surviving alternate path.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.net import (
+    LinkKind,
+    RouteSchedule,
+    big_switch,
+    fat_tree,
+    link_failure_schedule,
+)
+from repro.net.topology import ROUTE_DOWN_THRESHOLD
+from repro.streams import (
+    FleetRunner,
+    compile_fleet,
+    compile_sim,
+    link_failure_sweep,
+    parallelize,
+    round_robin,
+    simulate,
+    trending_topics,
+)
+from repro.streams.simulator import (
+    INTERNAL_RATE,
+    _route_states_over,
+    metric_index,
+)
+
+SECONDS = 40.0
+DT = 0.5
+
+
+def _tt_graph():
+    return parallelize(trending_topics(), seed=0)
+
+
+def _multihop_topo(cap: float = 1.875):
+    return fat_tree(up=12.5).set_capacity(LinkKind.INTERNAL, cap)
+
+
+def _core_links(topo, core: int) -> np.ndarray:
+    """All internal links touching one core (rack->core and core->rack)."""
+    return np.concatenate([
+        topo.rack_to_core_idx[:, core], topo.core_to_rack_idx[core, :]])
+
+
+def _flows(graph, placement):
+    return graph.flow_pairs(placement)
+
+
+class TestRouteSchedule:
+    def test_fail_recover_enumerates_two_states(self):
+        g = _tt_graph()
+        topo = _multihop_topo()
+        failed = _core_links(topo, 0)
+        sched = link_failure_schedule(topo, failed, 20.0, 40.0)
+        rs = RouteSchedule.from_events(
+            topo, _flows(g, round_robin(g, topo.n_machines)), sched)
+        # intervals: [0, 20) base, [20, 40) failed, [40, inf) base again —
+        # the recovery dedupes back onto state 0
+        assert rs.n_intervals == 3
+        assert rs.n_states == 2
+        np.testing.assert_array_equal(rs.t0, [0.0, 20.0, 40.0])
+        np.testing.assert_array_equal(rs.state, [0, 1, 0])
+        assert not rs.down[0].any()
+        np.testing.assert_array_equal(np.flatnonzero(rs.down[1]),
+                                      np.sort(failed))
+        # state bound: ≤ 2E + 1 boundaries
+        assert rs.n_states <= 2 * len(failed) + 1
+
+    def test_threshold_gates_rerouting(self):
+        g = _tt_graph()
+        topo = _multihop_topo()
+        flows = _flows(g, round_robin(g, topo.n_machines))
+        mild = link_failure_schedule(topo, _core_links(topo, 0), 20.0, 40.0,
+                                     degrade=ROUTE_DOWN_THRESHOLD + 0.1)
+        rs = RouteSchedule.from_events(topo, flows, mild)
+        # a brown-out above the threshold never changes the route set
+        assert rs.n_states == 1
+        deep = link_failure_schedule(topo, _core_links(topo, 0), 20.0, 40.0,
+                                     degrade=ROUTE_DOWN_THRESHOLD - 0.1)
+        assert RouteSchedule.from_events(topo, flows, deep).n_states == 2
+
+    def test_core_failure_repicks_surviving_core(self):
+        topo = fat_tree()  # 2 cores
+        # machine 0 (rack 0) -> machine 7 (rack 3): ECMP picks core 1
+        flows = [(0, 7), (0, 6)]
+        base = topo.routing_matrix(flows)
+        down = np.zeros(topo.n_links, bool)
+        down[_core_links(topo, 0)] = True
+        rs = RouteSchedule.from_events(
+            topo, flows, link_failure_schedule(topo, _core_links(topo, 0),
+                                               20.0, 40.0))
+        failed_R = rs.routes[1]
+        for f, (s, d) in enumerate(flows):
+            path = np.flatnonzero(failed_R[f])
+            # rerouted path avoids every down link and keeps endpoints
+            assert not down[path].any()
+            assert int(topo.uplink_idx[s]) in path
+            assert int(topo.downlink_idx[d]) in path
+        # flow (0, 6) used core 0 (0+6 mod 2) — it must move to core 1
+        assert (np.flatnonzero(failed_R[1]) != np.flatnonzero(base[1])).any()
+        # flow (0, 7) already used core 1 — minimally disruptive: unchanged
+        np.testing.assert_array_equal(failed_R[0], base[0])
+
+    def test_dead_route_retained_when_no_alternate(self):
+        topo = fat_tree()
+        flows = [(0, 7)]
+        base = topo.routing_matrix(flows).astype(np.float32)
+        up0 = int(topo.uplink_idx[0])
+        rs = RouteSchedule.from_events(
+            topo, flows, link_failure_schedule(topo, [up0], 20.0, 40.0))
+        # uplinks have no alternates: the flow keeps its dead base route
+        assert rs.n_states == 2
+        assert rs.down[1][up0]
+        np.testing.assert_array_equal(rs.routes[1], base)
+
+    def test_state_at_matches_interval_semantics(self):
+        g = _tt_graph()
+        topo = _multihop_topo()
+        sched = link_failure_schedule(topo, _core_links(topo, 0), 20.0, 40.0)
+        rs = RouteSchedule.from_events(
+            topo, _flows(g, round_robin(g, topo.n_machines)), sched)
+        # half-open [t0, t1): failed exactly at t_fail, back at t_recover
+        assert rs.state_at(19.9) == 0
+        assert rs.state_at(20.0) == 1
+        assert rs.state_at(39.9) == 1
+        assert rs.state_at(40.0) == 0
+        np.testing.assert_array_equal(rs.routes_at(25.0), rs.routes[1])
+
+
+class TestCompiledParity:
+    def _reroute_sim(self, t_fail=13.3, t_recover=27.7):
+        g = _tt_graph()
+        topo = _multihop_topo()
+        sched = link_failure_schedule(topo, _core_links(topo, 0),
+                                      t_fail, t_recover)
+        pl = round_robin(g, topo.n_machines)
+        rs = RouteSchedule.from_events(topo, _flows(g, pl), sched)
+        sim = compile_sim(g, topo, pl, schedule=sched, reroute=rs)
+        return sim, rs
+
+    def test_compiled_gather_matches_numpy_oracle(self):
+        # event boundaries deliberately off the tick grid *and* straddling
+        # the campaign chunk boundaries used below
+        sim, rs = self._reroute_sim()
+        assert sim.is_rerouting
+        ts = np.arange(int(SECONDS / DT), dtype=np.float32) * DT
+        states = np.asarray(_route_states_over(sim, jnp.asarray(ts)))
+        bank = np.asarray(sim.route_bank)
+        for k, t in enumerate(ts):
+            np.testing.assert_array_equal(bank[states[k]], rs.routes_at(t))
+
+    def test_single_state_schedule_is_bitwise_static(self):
+        # events above the threshold: reroute=True collapses to S_r = 0 and
+        # the run is bitwise the reroute=False path
+        g = _tt_graph()
+        topo = _multihop_topo()
+        sched = link_failure_schedule(topo, _core_links(topo, 0), 10.0, 30.0,
+                                      degrade=0.8)
+        pl = round_robin(g, topo.n_machines)
+        base = compile_sim(g, topo, pl, schedule=sched)
+        rer = compile_sim(g, topo, pl, schedule=sched, reroute=True)
+        assert not rer.is_rerouting
+        for policy in ("tcp", "appaware"):
+            a = simulate(base, policy, seconds=SECONDS, dt=DT)
+            b = simulate(rer, policy, seconds=SECONDS, dt=DT)
+            np.testing.assert_array_equal(a.sink_mb, b.sink_mb)
+            np.testing.assert_array_equal(a.link_load, b.link_load)
+            np.testing.assert_array_equal(a.metrics, b.metrics)
+
+
+class TestFleetParity:
+    @pytest.fixture(scope="class")
+    def mixed_sims(self):
+        # reroute scenarios + a static scenario + an in-run capacity-only
+        # failure: exercises mixed-bucket padding of the route fields
+        scens = link_failure_sweep(n=2, seed=3, reroute=True)
+        scens += link_failure_sweep(n=1, seed=3, in_run=True)
+        g = _tt_graph()
+        topo = big_switch(8, 1.25)
+        sims = compile_fleet(scens) + [compile_sim(g, topo, round_robin(g, 8))]
+        assert any(s.is_rerouting for s in sims)
+        assert any(not s.is_rerouting for s in sims)
+        return sims
+
+    @pytest.mark.parametrize("policy", ["tcp", "appaware", "appfair", "fixed"])
+    def test_fleet_matches_standalone(self, mixed_sims, policy):
+        runner = FleetRunner()
+        xf = None
+        if policy == "fixed":
+            xf = [np.full(int(np.asarray(s.has_links).shape[0]), 0.05,
+                          np.float32) for s in mixed_sims]
+        res = runner.run(mixed_sims, policy, seconds=SECONDS, dt=DT,
+                         x_fixed=xf, shard=False)
+        for b, sim in enumerate(mixed_sims):
+            ref = simulate(sim, policy, seconds=SECONDS, dt=DT,
+                           x_fixed=None if xf is None else xf[b])
+            # fleet padding re-associates contractions (same ≤ 1e-5 bound
+            # the padding-neutrality suite pins); bitwise contracts live in
+            # the campaign streamed-vs-materialized comparison below
+            np.testing.assert_allclose(res[b].sink_mb, ref.sink_mb,
+                                       atol=1e-5)
+            np.testing.assert_allclose(res[b].metrics, ref.metrics,
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_campaign_chunks_straddle_route_events(self, mixed_sims):
+        # chunk_rows=2 forces multiple chunks per bucket; the route bank
+        # must ride into every chunk identically — streamed metrics are
+        # bitwise the materialized fleet run's
+        runner = FleetRunner()
+        camp = runner.run_campaign(mixed_sims, "appaware", seconds=SECONDS,
+                                   dt=DT, chunk_rows=2, shard=False)
+        res = runner.run(mixed_sims, "appaware", seconds=SECONDS, dt=DT,
+                         shard=False)
+        for b in range(len(mixed_sims)):
+            np.testing.assert_array_equal(camp.metrics[b], res[b].metrics)
+
+
+class TestRerouteRecovery:
+    def test_appaware_reroute_beats_no_reroute_post_failure(self):
+        """The headline claim: with a surviving alternate core path, SDN
+        rerouting recovers post-failure throughput that capacity-aware
+        allocation alone cannot (it can only starve the dead routes)."""
+        g = _tt_graph()
+        topo = _multihop_topo()
+        # 4-link mid-run failure: every rack->core-0 link dies at t = 60 s
+        # (no recovery), so all cross-rack flows ECMP-mapped to core 0
+        # lose their path unless rerouted through core 1
+        failed = topo.rack_to_core_idx[:, 0]
+        assert len(failed) == 4
+        sched = link_failure_schedule(topo, failed, 60.0)
+        pl = round_robin(g, topo.n_machines)
+        base = compile_sim(g, topo, pl, schedule=sched)
+        rer = compile_sim(g, topo, pl, schedule=sched, reroute=True)
+        assert rer.is_rerouting
+
+        def post_failure_tput(sim):
+            r = simulate(sim, "appaware", seconds=120.0, dt=DT,
+                         t_event=60.0)
+            post = r.sink_mb[int(60.0 / DT):]
+            return float(post.sum() / (len(post) * DT))
+
+        with_rr = post_failure_tput(rer)
+        without = post_failure_tput(base)
+        assert with_rr >= 1.1 * without, (
+            f"reroute {with_rr:.3f} MB/s vs no-reroute {without:.3f} MB/s")
+
+
+def test_internal_rate_unaffected_by_reroute():
+    # internal (same-machine) flows never enter the routing matrix; a
+    # reroute state must leave their rate pinned at INTERNAL_RATE
+    g = _tt_graph()
+    topo = _multihop_topo()
+    pl = np.zeros(g.n_instances, dtype=np.int64)  # everything co-located
+    sched = link_failure_schedule(topo, _core_links(topo, 0), 10.0, 30.0)
+    sim = compile_sim(g, topo, pl, schedule=sched, reroute=True)
+    # all flows internal -> no routed links at all -> nothing to reroute
+    assert not np.asarray(sim.has_links).any()
+    assert not sim.is_rerouting or np.asarray(sim.route_bank).sum() == 0
+    r = simulate(sim, "tcp", seconds=10.0, dt=DT)
+    assert np.isfinite(r.sink_mb).all()
+    assert INTERNAL_RATE > 0  # imported constant still the internal pin
+
+
+def test_metric_index_stable():
+    # consumers (campaign CSVs, the ULP pin in test_multidevice) address
+    # metrics by name; keep the total_sink_mb column where they expect it
+    assert metric_index("total_sink_mb") == 6

@@ -76,6 +76,29 @@ class TestPlacement:
         s, d = g.src_of_flow[heavy], g.dst_of_flow[heavy]
         assert m[s] == m[d]
 
+    @given(app_seed=st.integers(min_value=0, max_value=2**31 - 1),
+           n_machines=st.integers(min_value=2, max_value=12),
+           slack=st.integers(min_value=0, max_value=3))
+    @settings(max_examples=30, deadline=None)
+    def test_traffic_aware_respects_cap(self, app_seed, n_machines, slack):
+        # every feasible cap binds on every machine — the first-endpoint
+        # and leftover placements used to fall back to a bare argmin(load)
+        # that silently exceeded a user-supplied cap_per_machine
+        from repro.streams.scenarios import random_app
+
+        g = parallelize(random_app(app_seed), seed=app_seed)
+        cap = -(-g.n_instances // n_machines) + slack
+        m = traffic_aware(g, n_machines, cap_per_machine=cap)
+        assert m.min() >= 0 and m.max() < n_machines
+        counts = np.bincount(m, minlength=n_machines)
+        assert counts.max() <= cap, (counts, cap)
+
+    def test_traffic_aware_infeasible_cap_raises(self):
+        g = parallelize(trending_topics(), seed=0)
+        with pytest.raises(ValueError, match="cap_per_machine"):
+            traffic_aware(g, 4, cap_per_machine=max(
+                1, (g.n_instances - 1) // 4))
+
 
 class TestTickInvariants:
     """Conservation/feasibility invariants of one `_tick` (the fluid step
