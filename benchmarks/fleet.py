@@ -435,6 +435,70 @@ def run_campaign_auto(policy: str = "tcp", n: int = 256,
     }]
 
 
+def run_campaign_resilience(policy: str = "tcp", n: int = 256,
+                            seconds: float = SECONDS,
+                            chunk_rows: int = 64) -> list[dict]:
+    """Fault-free overhead of the resilience guards.
+
+    The guarded side runs the campaign at its defaults — finite-check on
+    every [rows, n_metrics] slab, the transfer watchdog armed, plus a
+    checkpoint append (slab write + fsync'd manifest line) per chunk into
+    a fresh directory per rep (a reused directory would resume instead of
+    measure). The bare side switches every guard off. Reps are
+    INTERLEAVED so container drift cancels out of the ratio, best-of
+    (min) per side; the gate ceiling asserts guarded ≤ 1.05× bare in full
+    mode — the resilience layer must be effectively free when nothing
+    fails, since it is always on by default."""
+    import shutil
+    import tempfile
+
+    sims = compile_fleet(campaign_fleet(n, seed=0))
+    runner = FleetRunner()
+    tmp = tempfile.mkdtemp(prefix="bench_resilience_ckpt_")
+    n_ck = [0]
+
+    def guarded():
+        n_ck[0] += 1
+        return runner.run_campaign(
+            sims, policy, seconds=seconds, dt=DT, chunk_rows=chunk_rows,
+            checkpoint=os.path.join(tmp, f"ck{n_ck[0]}"))
+
+    def bare():
+        return runner.run_campaign(
+            sims, policy, seconds=seconds, dt=DT, chunk_rows=chunk_rows,
+            finite_check=False, transfer_timeout_s=None)
+
+    try:
+        g0, b0 = guarded(), bare()  # compile (shared executables)
+        assert np.array_equal(g0.metrics, b0.metrics)  # guards are inert
+        assert not g0.failures
+        g_ts, b_ts, stats = [], [], None
+        for _ in range(WARM_REPS):
+            t, _ = _wall(guarded)
+            g_ts.append(t)
+            stats = dict(runner.last_stats)
+            t, _ = _wall(bare)
+            b_ts.append(t)
+        t_g = float(np.min(g_ts))
+        t_b = float(np.min(b_ts))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return [{
+        "name": "fleet_campaign_resilience",
+        "us_per_call": t_g * 1e6,
+        "n_scenarios": n,
+        "backend": jax.default_backend(),
+        "guarded_warm_s": round(t_g, 3),
+        "bare_warm_s": round(t_b, 3),
+        # ~1: finite-check + checkpoint append + watchdog are free when
+        # nothing fails (gate ceiling: <= 1.05 full mode)
+        "guard_overhead": round(t_g / t_b, 3),
+        "n_chunks": stats["n_chunks"],
+        "n_quarantined": stats["n_quarantined"],
+        "n_retries": stats["n_retries"],
+    }]
+
+
 def run_campaign_scaling(policy: str = "tcp", n: int = 256,
                          seconds: float = SECONDS) -> list[dict]:
     """Sharded chunk stream at 4 emulated devices vs 1 device.
@@ -521,6 +585,7 @@ def main() -> None:
     rows += run_order_cache()
     rows += run_campaign_bench()
     rows += run_campaign_auto()
+    rows += run_campaign_resilience()
     rows += run_campaign_scaling()
     emit(rows, "fleet")
 

@@ -7,6 +7,13 @@ from repro.streams.app import (  # noqa: F401
     parallelize,
     source_sink_paths,
 )
+from repro.streams.faults import (  # noqa: F401
+    FailureRecord,
+    FaultAbort,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+)
 from repro.streams.fleet import (  # noqa: F401
     CampaignResult,
     FleetRunner,

@@ -116,12 +116,15 @@ API is unchanged.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 import os
 import time
 import weakref
 import zlib
+from concurrent.futures import CancelledError as FuturesCancelledError
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeoutError
 from typing import Sequence
 
 import jax
@@ -136,11 +139,17 @@ from jax.sharding import (
 
 from repro.core.tcp import maxmin_fused
 from repro.net.topology import LinkKind
+from repro.streams.faults import (
+    FailureRecord,
+    FaultPlan,
+    InjectedFault,
+)
 from repro.streams.simulator import (
     CAMPAIGN_METRICS,
     CompiledSim,
     SimResult,
     _run,
+    _validate_sim_inputs,
     metric_index,
     resolve_upd_every,
     result_from_padded_row,
@@ -552,6 +561,16 @@ def pad_sim(sim: CompiledSim, shape: FleetShape,
     S, E = shape.n_sins, shape.n_events
     if sim.n_apps > A:
         raise ValueError(f"cannot pad n_apps {sim.n_apps} down to {A}")
+    # the compile boundary already validates, but sims are mutable and may
+    # be hand-built — catch poisoned fields before they pad into a fleet
+    _validate_sim_inputs(
+        "pad_sim",
+        finite_nonneg=[("caps", sim.caps),
+                       ("gen_rate", sim.gen_rate),
+                       ("ev_scale", sim.ev_scale)],
+        nonneg_inf_ok=[("proc_rate", sim.proc_rate),
+                       ("ev_t0", sim.ev_t0),
+                       ("ev_t1", sim.ev_t1)])
     f = False
     route_bank, route_t, route_state = _pad_route_fields(
         sim, F, L, shape.n_route_states)
@@ -663,6 +682,13 @@ class CampaignResult:
     trajectories only when the caller opted in
     (``retain_trajectories=True``) — otherwise ``None``, and no ``[T, …]``
     array ever left the device.
+
+    ``failures`` is the structured quarantine report: one
+    :class:`~repro.streams.faults.FailureRecord` per scenario the
+    resilience layer gave up on (retries exhausted, or a non-finite
+    metric row isolated by bisection). A quarantined scenario's
+    ``metrics`` row is all-NaN; every other row is exactly what a
+    fault-free campaign would have produced.
     """
 
     metrics: np.ndarray           # [N, n_metrics], MB-based
@@ -670,10 +696,17 @@ class CampaignResult:
     dt: float
     policy: str
     results: list[SimResult] | None = None
+    failures: list[FailureRecord] = dataclasses.field(default_factory=list)
 
     def metric(self, name: str) -> np.ndarray:
         """[N] column of ``metrics`` by :data:`CAMPAIGN_METRICS` name."""
         return self.metrics[:, metric_index(name)]
+
+    @property
+    def quarantined(self) -> np.ndarray:
+        """[K] sorted scenario indices quarantined by the resilience
+        layer (their ``metrics`` rows are NaN)."""
+        return np.asarray(sorted({f.scenario for f in self.failures}), int)
 
     @property
     def throughput_tps(self) -> np.ndarray:
@@ -700,6 +733,89 @@ class CampaignResult:
     @property
     def recovery_time_s(self) -> np.ndarray:
         return self.metric("recovery_time_s")
+
+
+# ------------------------------------------------------------- checkpoints
+# A campaign checkpoint is a directory: `manifest.jsonl` (one JSON line
+# per completed chunk: campaign fingerprint, job index, scenario indices,
+# slab filename, failures) plus one `chunk_<fp8>_<job>.npy` float32 slab
+# per chunk, written BEFORE its manifest line — a manifest entry therefore
+# implies its slab exists, and a kill between the two costs one chunk of
+# re-work, never a torn read. Filenames carry the fingerprint prefix so a
+# stale campaign's chunks can never collide with the current one's.
+
+def _campaign_fingerprint(sims: Sequence[CompiledSim], jobs, cap_rows,
+                          plan, base_key, qcap, x_fixed) -> str:
+    """Hex digest pinning everything that determines a campaign's metric
+    rows: run parameters, bucket plan + chunking structure, every
+    scenario's staged field bytes, and the fixed-rate vectors. Any drift
+    ⇒ different fingerprint ⇒ checkpoint entries are ignored rather than
+    restored into the wrong campaign."""
+    h = zlib.crc32(repr(base_key).encode())
+    h = zlib.crc32(repr(float(qcap)).encode(), h)
+    h = zlib.crc32(repr([(bi, tuple(idxs)) for bi, idxs in jobs]).encode(), h)
+    h = zlib.crc32(repr(list(cap_rows)).encode(), h)
+    h = zlib.crc32(repr([dataclasses.astuple(s) for _, s in plan]).encode(), h)
+    for s in sims:
+        h = zlib.crc32(_sim_content_sig(s).to_bytes(8, "little"), h)
+    if x_fixed is not None:
+        for xf in x_fixed:
+            a = np.ascontiguousarray(np.asarray(xf, np.float32))
+            h = zlib.crc32(a.tobytes(), h)
+    return f"{h:08x}"
+
+
+def _checkpoint_load(path: str, fp: str, jobs, n_metrics: int
+                     ) -> dict[int, tuple[np.ndarray, list[FailureRecord]]]:
+    """Restorable chunks: {job index: (metric slab, failures)} for every
+    manifest entry matching this campaign's fingerprint whose slab exists
+    and whose scenario list still matches the job structure. Torn or
+    foreign lines are skipped, not fatal — resume is best-effort."""
+    done: dict[int, tuple[np.ndarray, list[FailureRecord]]] = {}
+    mpath = os.path.join(path, "manifest.jsonl")
+    if not os.path.exists(mpath):
+        return done
+    with open(mpath) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                e = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # torn tail from a kill mid-append
+            if e.get("fp") != fp:
+                continue
+            j = int(e["job"])
+            if j >= len(jobs) or [int(i) for i in e["idxs"]] != list(
+                    jobs[j][1]):
+                continue
+            fn = os.path.join(path, os.path.basename(e["file"]))
+            if not os.path.exists(fn):
+                continue
+            slab = np.load(fn)
+            if slab.shape != (len(e["idxs"]), n_metrics):
+                continue
+            fails = [FailureRecord(int(r[0]), str(r[1]), str(r[2]),
+                                   int(r[3]))
+                     for r in e.get("failures", [])]
+            done[j] = (slab, fails)
+    return done
+
+
+def _checkpoint_append(path: str, fp: str, j: int, idxs,
+                       slab: np.ndarray,
+                       fails: Sequence[FailureRecord]) -> None:
+    fn = f"chunk_{fp}_{j:05d}.npy"
+    np.save(os.path.join(path, fn), slab)
+    entry = {"fp": fp, "job": j, "idxs": [int(i) for i in idxs],
+             "file": fn,
+             "failures": [[f.scenario, f.stage, f.reason, f.attempts]
+                          for f in fails]}
+    with open(os.path.join(path, "manifest.jsonl"), "a") as f:
+        f.write(json.dumps(entry) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
 
 
 class FleetRunner:
@@ -1091,6 +1207,13 @@ class FleetRunner:
         t_event: float = 0.0,
         chunk_rows: int | str = 64,
         retain_trajectories: bool = False,
+        faults: FaultPlan | None = None,
+        max_retries: int = 3,
+        retry_backoff_s: float = 0.05,
+        retry_backoff_cap_s: float = 1.0,
+        transfer_timeout_s: float | None = 60.0,
+        checkpoint: str | os.PathLike | None = None,
+        finite_check: bool = True,
     ) -> CampaignResult:
         """Streaming campaign dispatch: run an arbitrarily large fleet in
         fixed-shape chunks with bounded host/device memory (see module
@@ -1129,6 +1252,29 @@ class FleetRunner:
         in-flight compute; 1.0 when nothing was hideable — a single-chunk
         campaign has no compute to hide behind) and ``transfer_overlap``
         (share of H2D copy time not re-paid as dispatch-thread waiting).
+
+        **Resilience** (all host-side; the compiled executables are
+        untouched and a fault-free campaign is bitwise-identical with the
+        guards on): a chunk whose pack/transfer/dispatch raises — or
+        whose transfer exceeds ``transfer_timeout_s`` — is retried
+        synchronously with capped exponential backoff
+        (``max_retries`` × ``retry_backoff_s``…``retry_backoff_cap_s``);
+        a chunk that exhausts retries, or whose ``[rows, n_metrics]``
+        epilogue slab contains non-finite values (``finite_check``; +inf
+        in the recovery column is legitimate), is bisected
+        scenario-by-scenario to isolate the poisoned rows. Quarantined
+        scenarios get all-NaN metric rows and a
+        :class:`~repro.streams.faults.FailureRecord` in
+        ``CampaignResult.failures`` while the rest of the campaign
+        completes bitwise-clean. With ``checkpoint=dir`` every collected
+        chunk's slab is appended to disk and a re-run over the same
+        corpus/parameters (same fingerprint) restores completed chunks
+        bitwise without re-dispatching them. ``faults`` injects a
+        deterministic :class:`~repro.streams.faults.FaultPlan` to
+        exercise all of the above. On *any* error (including
+        KeyboardInterrupt) the pipeline tears down cleanly and
+        ``last_stats`` reports ``{"status": "failed", ...}`` with the
+        progress made.
         """
         if not sims:
             raise ValueError("empty campaign")
@@ -1141,6 +1287,12 @@ class FleetRunner:
         sims = list(sims)
         if x_fixed is not None and len(x_fixed) != len(sims):
             raise ValueError("x_fixed must give one rate vector per scenario")
+        if checkpoint is not None and retain_trajectories:
+            raise ValueError(
+                "checkpoint + retain_trajectories is unsupported: resumed "
+                "chunks restore metric slabs only, never trajectories")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
         n_ticks = int(round(smoke_seconds(seconds) / dt))
         upd_every = resolve_upd_every(policy, dt, upd_every)
         n_dev = len(jax.devices()) if shard else 1
@@ -1206,57 +1358,304 @@ class FleetRunner:
         inflight: list[list] = [[] for _ in range(n_streams)]
         staged_n = [0] * n_streams
 
-        def _h2d(host_pack, sh):
+        # ---- resilience state (inert on the fault-free path) ----
+        failures: list[FailureRecord] = []
+        n_retries = n_recovered = n_dispatched = 0
+        chunks_done = 0
+        rec_col = metric_index("recovery_time_s")
+
+        # ---- checkpoint/resume ----
+        ckpt_dir = ckpt_fp = None
+        done_jobs: dict[int, tuple[np.ndarray, list[FailureRecord]]] = {}
+        if checkpoint is not None:
+            ckpt_dir = os.fspath(checkpoint)
+            os.makedirs(ckpt_dir, exist_ok=True)
+            ckpt_fp = _campaign_fingerprint(
+                sims, jobs, cap_rows, plan, base_key, qcap, x_fixed)
+            done_jobs = _checkpoint_load(ckpt_dir, ckpt_fp, jobs, n_metrics)
+            for j, (slab, fails) in done_jobs.items():
+                for b, i in enumerate(jobs[j][1]):
+                    metrics_all[i] = slab[b]  # np.save/load f32: bitwise
+                failures.extend(fails)
+        n_resumed = len(done_jobs)
+
+        def _fire(stage, j):
+            if faults is not None:
+                faults.fire(stage, j)
+
+        def _slab_rows_ok(m):
+            # [n, n_metrics] -> [n] bool. NaN is poison everywhere; +inf
+            # is poison everywhere EXCEPT the recovery column, where it
+            # legitimately means "never recovered within the horizon"
+            ok = np.isfinite(m)
+            ok[:, rec_col] = ~np.isnan(m[:, rec_col])
+            return ok.all(axis=1)
+
+        def _chunk_complete(j, idxs):
+            nonlocal chunks_done
+            chunks_done += 1
+            if ckpt_fp is not None:
+                idx_set = set(idxs)
+                fl = [f for f in failures if f.scenario in idx_set]
+                _checkpoint_append(ckpt_dir, ckpt_fp, j, idxs,
+                                   metrics_all[list(idxs)].copy(), fl)
+
+        def _h2d(host_pack, sh, j):
             # transfer worker. NOTE: on CPU, device_put zero-copy aliases
             # 64-byte-aligned numpy buffers instead of copying (measured),
             # so a resolved future does NOT mean the host slot is free —
             # the triple-buffered slot rotation below owns that invariant
             t0 = time.perf_counter()
+            _fire("transfer", j)
             dev = jax.device_put(host_pack, sh)
             jax.block_until_ready(dev)
             return dev, time.perf_counter() - t0
 
         def _collect_oldest(s):
             nonlocal block_s, inflight_total
-            idxs, chunk, outs = inflight[s].pop(0)
+            j, bi, idxs, chunk, outs = inflight[s].pop(0)
             t0 = time.perf_counter()
             # block ONLY on the [rows, n_metrics] epilogue leaf; the [T, …]
             # trajectory outputs stay on device and free when `outs` drops
-            m = np.asarray(outs[6])
+            try:
+                m = np.asarray(outs[6])
+            except Exception as e:  # noqa: BLE001 — route to recovery
+                inflight_total -= 1
+                block_s += time.perf_counter() - t0
+                _recover_chunk(bi, j, idxs, chunk, e)
+                return
+            if faults is not None and faults.poison:
+                # copy before poisoning: np.asarray of a device array may
+                # be a read-only (or aliasing) view
+                m = np.array(m)
+                m[:len(idxs)][faults.poison_mask(idxs)] = np.nan
+            bad = None
+            if finite_check:
+                ok = _slab_rows_ok(m[:len(idxs)])
+                if not ok.all():
+                    bad = ~ok
             for b, i in enumerate(idxs):
-                metrics_all[i] = m[b]
+                if bad is None or not bad[b]:
+                    metrics_all[i] = m[b]
             if results is not None:
                 host = [np.asarray(o) for o in outs[:6]]
                 for b, i in enumerate(idxs):
-                    results[i] = result_from_padded_row(
-                        chunk[b], b, dt, *host, m)
+                    if bad is None or not bad[b]:
+                        results[i] = result_from_padded_row(
+                            chunk[b], b, dt, *host, m)
             inflight_total -= 1
             block_s += time.perf_counter() - t0
+            if bad is not None:
+                # non-finite rows: good rows above are final (vmap rows
+                # are independent); bisect only the poisoned ones
+                _bisect(bi, j,
+                        [i for b, i in enumerate(idxs) if bad[b]],
+                        [c for b, c in enumerate(chunk) if bad[b]])
+            _chunk_complete(j, idxs)
 
         def _dispatch(s):
-            nonlocal dispatch_s, transfer_s, transfer_wait_s, inflight_total
-            bi, idxs, chunk, fut = pending[s]
+            nonlocal dispatch_s, transfer_s, transfer_wait_s
+            nonlocal inflight_total, n_dispatched
+            bi, j, idxs, chunk, fut = pending[s]
             pending[s] = None
             t0 = time.perf_counter()
-            (pack, xf, enf), t_copy = fut.result()
+            try:
+                (pack, xf, enf), t_copy = (
+                    fut.result() if transfer_timeout_s is None
+                    else fut.result(timeout=transfer_timeout_s))
+            except FuturesTimeoutError:
+                transfer_wait_s += time.perf_counter() - t0
+                # hung transfer: the worker may be wedged in a driver
+                # call, so abandon the whole executor (the hung thread
+                # leaks until it returns; its eventual device_put result
+                # is dropped unread) and rebuild the pipeline on a fresh
+                # one, then re-run the chunk synchronously
+                _replace_executor()
+                _recover_chunk(bi, j, idxs, chunk, TimeoutError(
+                    f"H2D transfer of chunk {j} exceeded "
+                    f"{transfer_timeout_s}s"))
+                return
+            except (Exception, FuturesCancelledError) as e:  # noqa: BLE001
+                # CancelledError is a BaseException since 3.8 but here
+                # only means "the watchdog replaced the executor while
+                # this stream's copy was queued" — recoverable
+                transfer_wait_s += time.perf_counter() - t0
+                _recover_chunk(bi, j, idxs, chunk, e)
+                return
             transfer_wait_s += time.perf_counter() - t0
             transfer_s += t_copy
             t0 = time.perf_counter()
-            outs = fns[bi]((pack,), (xf,), (enf,), jnp.float32(qcap))[0]
+            try:
+                _fire("dispatch", j)
+                outs = fns[bi]((pack,), (xf,), (enf,), jnp.float32(qcap))[0]
+            except Exception as e:  # noqa: BLE001 — route to recovery
+                dispatch_s += time.perf_counter() - t0
+                _recover_chunk(bi, j, idxs, chunk, e)
+                return
+            n_dispatched += 1
             dispatch_s += time.perf_counter() - t0
-            inflight[s].append((idxs, chunk, outs))
+            inflight[s].append((j, bi, idxs, chunk, outs))
             inflight_total += 1
             if len(inflight[s]) > 1:
                 _collect_oldest(s)
 
-        with ThreadPoolExecutor(max_workers=1,
-                                thread_name_prefix="h2d") as ex:
+        # ---- recovery: synchronous retry / bisect / quarantine ----
+        # All recovery re-runs use the SAME per-bucket executable at the
+        # SAME padded row count as the pipeline path — vmap rows are
+        # independent and spare rows inert, so a scenario's metric row is
+        # bitwise-identical whichever sub-chunk it rides in.
+
+        def _replace_executor():
+            ex_holder[0].shutdown(wait=False, cancel_futures=True)
+            ex_holder[0] = ThreadPoolExecutor(max_workers=1,
+                                              thread_name_prefix="h2d")
+
+        def _stage_of(err):
+            if isinstance(err, InjectedFault):
+                return err.stage
+            if isinstance(err, (TimeoutError, FuturesTimeoutError)):
+                return "transfer"
+            return "run"
+
+        def _run_subset_once(bi, j, idxs, chunk, s):
+            """One synchronous pack→transfer→dispatch→collect of a chunk
+            subset. Staging goes into FRESH scratch buffers — never the
+            rotating pipeline slots, which an in-flight (or abandoned)
+            transfer may still alias."""
+            nonlocal n_dispatched
+            shape = plan[bi][1]
+            rows = cap_rows[bi]
+            _fire("pack", j)
+            leaves = self._fill_bucket({}, chunk, shape, rows)
+            stacked = CompiledSim(tuples_per_mb=1.0,
+                                  n_apps=shape.n_apps, **leaves)
+            xf = None
+            if x_fixed is not None:
+                xf = np.zeros((rows, shape.n_flows), np.float32)
+                for b, i in enumerate(idxs):
+                    xf[b, :len(x_fixed[i])] = np.asarray(x_fixed[i],
+                                                         np.float32)
+            enf = np.zeros(rows, bool)
+            for b, sim in enumerate(chunk):
+                enf[b] = sim.is_dynamic
+            _fire("transfer", j)
+            pack, xfd, enfd = jax.device_put((stacked, xf, enf),
+                                             stream_sh[s])
+            _fire("dispatch", j)
+            outs = fns[bi]((pack,), (xfd,), (enfd,), jnp.float32(qcap))[0]
+            n_dispatched += 1
+            m = np.array(np.asarray(outs[6])[:len(idxs)])
+            if faults is not None and faults.poison:
+                m[faults.poison_mask(idxs)] = np.nan
+            host = ([np.asarray(o) for o in outs[:6]]
+                    if results is not None else None)
+            return m, host
+
+        def _try_subset(bi, j, idxs, chunk, s):
+            """Run a subset with capped-exponential-backoff retries.
+            Returns (m, host, err, attempts); err is the last exception
+            when every attempt failed."""
+            nonlocal n_retries
+            err = None
+            for attempt in range(max_retries + 1):
+                if attempt:
+                    n_retries += 1
+                    time.sleep(min(retry_backoff_s * 2.0 ** (attempt - 1),
+                                   retry_backoff_cap_s))
+                try:
+                    m, host = _run_subset_once(bi, j, idxs, chunk, s)
+                    return m, host, None, attempt + 1
+                except Exception as e:  # noqa: BLE001 — retried
+                    err = e
+            return None, None, err, max_retries + 1
+
+        def _accept_rows(idxs, chunk, m, host, ok=None):
+            for b, i in enumerate(idxs):
+                if ok is None or ok[b]:
+                    metrics_all[i] = m[b]
+                    if results is not None and host is not None:
+                        results[i] = result_from_padded_row(
+                            chunk[b], b, dt, *host, m)
+
+        def _quarantine(i, stage, reason, attempts):
+            metrics_all[i] = np.nan
+            if results is not None:
+                results[i] = None
+            failures.append(FailureRecord(scenario=int(i), stage=stage,
+                                          reason=reason, attempts=attempts))
+
+        def _bisect(bi, j, idxs, chunk):
+            """Isolate poisoned scenarios: run halves (with retries);
+            surviving rows are accepted, failing halves recurse down to
+            single scenarios, which are quarantined."""
+            if not idxs:
+                return
+            s = j % n_streams
+            if len(idxs) == 1:
+                m, host, err, attempts = _try_subset(bi, j, idxs, chunk, s)
+                if err is not None:
+                    _quarantine(idxs[0], _stage_of(err), repr(err), attempts)
+                elif finite_check and not _slab_rows_ok(m)[0]:
+                    _quarantine(idxs[0], "non_finite",
+                                "non-finite values in metric epilogue row",
+                                attempts)
+                else:
+                    _accept_rows(idxs, chunk, m, host)
+                return
+            mid = (len(idxs) + 1) // 2
+            for lo, hi in ((0, mid), (mid, len(idxs))):
+                sub_i, sub_c = idxs[lo:hi], chunk[lo:hi]
+                m, host, err, _ = _try_subset(bi, j, sub_i, sub_c, s)
+                if err is not None:
+                    _bisect(bi, j, sub_i, sub_c)
+                    continue
+                ok = (_slab_rows_ok(m) if finite_check
+                      else np.ones(len(sub_i), bool))
+                _accept_rows(sub_i, sub_c, m, host, ok)
+                if not ok.all():
+                    _bisect(bi, j,
+                            [i for b, i in enumerate(sub_i) if not ok[b]],
+                            [c for b, c in enumerate(sub_c) if not ok[b]])
+
+        def _recover_chunk(bi, j, idxs, chunk, first_error):
+            """Chunk-level failure path: whole-chunk retries with backoff;
+            retries exhausted (or surviving non-finite rows) bisect down
+            to the scenarios responsible. Never raises — the campaign
+            completes with quarantined rows instead of dying."""
+            nonlocal n_recovered
+            n_recovered += 1
+            m, host, err, _ = _try_subset(bi, j, idxs, chunk,
+                                          j % n_streams)
+            if err is not None:
+                _bisect(bi, j, idxs, chunk)
+            else:
+                ok = (_slab_rows_ok(m) if finite_check
+                      else np.ones(len(idxs), bool))
+                _accept_rows(idxs, chunk, m, host, ok)
+                if not ok.all():
+                    _bisect(bi, j,
+                            [i for b, i in enumerate(idxs) if not ok[b]],
+                            [c for b, c in enumerate(chunk) if not ok[b]])
+            _chunk_complete(j, idxs)
+
+        # manual executor lifecycle (not a `with` block): the transfer
+        # watchdog may abandon a wedged executor mid-run and install a
+        # fresh one, and the finally-teardown must be able to cancel
+        # whatever executor is current at failure time
+        ex_holder = [ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="h2d")]
+        status = "failed"
+        error_repr = None
+        try:
             for j, (bi, idxs) in enumerate(jobs):
+                if j in done_jobs:
+                    continue  # restored bitwise from the checkpoint
                 s = j % n_streams
+                _fire("abort", j)
                 # --- compute: if the previous chunk's bytes already
                 # landed, put it to work BEFORE packing the next chunk so
                 # its program runs under the whole stage interval ---
-                if pending[s] is not None and pending[s][3].done():
+                if pending[s] is not None and pending[s][4].done():
                     _dispatch(s)
                 shape = plan[bi][1]
                 rows = cap_rows[bi]
@@ -1264,38 +1663,49 @@ class FleetRunner:
                 chunk = [sims[i] for i in idxs]
                 # --- stage chunk j into this stream's rotating slot ---
                 t0 = time.perf_counter()
-                # THREE slot phases, one per pipeline stage: device_put on
-                # CPU zero-copy ALIASES any 64-byte-aligned numpy buffer
-                # (measured; whether a given np.empty lands aligned is
-                # allocator luck), so a slot may only be refilled once its
-                # previous occupant's *execution* has been collected — not
-                # merely once its transfer resolved. The pipeline lags
-                # staging by at most two chunks (one pending transfer plus
-                # one uncollected dispatch: the forced dispatch before
-                # every submit collects down to a single in-flight chunk),
-                # so phase c%3 — last filled for chunk c-3, collected
-                # during chunk c-2's dispatch — is guaranteed idle.
-                # Slots of any OTHER shape on this stream are dropped
-                # (an in-progress transfer keeps the numpy alive via its
-                # own reference; dropping the dict entry never mutates)
-                for k in [k for k in self._campaign_bufs
-                          if k[2] == s and k[:2] != (shape_t, rows)]:
-                    del self._campaign_bufs[k]
-                bufs = self._campaign_bufs.setdefault(
-                    (shape_t, rows, s, staged_n[s] % 3), {})
-                leaves = self._fill_bucket(bufs, chunk, shape, rows)
-                stacked = CompiledSim(tuples_per_mb=1.0,
-                                      n_apps=shape.n_apps, **leaves)
-                if x_fixed is None:
-                    xf = None
-                else:
-                    xf = np.zeros((rows, shape.n_flows), np.float32)
-                    for b, i in enumerate(idxs):
-                        xf[b, :len(x_fixed[i])] = np.asarray(
-                            x_fixed[i], np.float32)
-                enf = np.zeros(rows, bool)
-                for b, sim in enumerate(chunk):
-                    enf[b] = sim.is_dynamic
+                try:
+                    _fire("pack", j)
+                    # THREE slot phases, one per pipeline stage:
+                    # device_put on CPU zero-copy ALIASES any
+                    # 64-byte-aligned numpy buffer (measured; whether a
+                    # given np.empty lands aligned is allocator luck), so
+                    # a slot may only be refilled once its previous
+                    # occupant's *execution* has been collected — not
+                    # merely once its transfer resolved. The pipeline lags
+                    # staging by at most two chunks (one pending transfer
+                    # plus one uncollected dispatch: the forced dispatch
+                    # before every submit collects down to a single
+                    # in-flight chunk), so phase c%3 — last filled for
+                    # chunk c-3, collected during chunk c-2's dispatch —
+                    # is guaranteed idle. Slots of any OTHER shape on this
+                    # stream are dropped (an in-progress transfer keeps
+                    # the numpy alive via its own reference; dropping the
+                    # dict entry never mutates)
+                    for k in [k for k in self._campaign_bufs
+                              if k[2] == s and k[:2] != (shape_t, rows)]:
+                        del self._campaign_bufs[k]
+                    bufs = self._campaign_bufs.setdefault(
+                        (shape_t, rows, s, staged_n[s] % 3), {})
+                    leaves = self._fill_bucket(bufs, chunk, shape, rows)
+                    stacked = CompiledSim(tuples_per_mb=1.0,
+                                          n_apps=shape.n_apps, **leaves)
+                    if x_fixed is None:
+                        xf = None
+                    else:
+                        xf = np.zeros((rows, shape.n_flows), np.float32)
+                        for b, i in enumerate(idxs):
+                            xf[b, :len(x_fixed[i])] = np.asarray(
+                                x_fixed[i], np.float32)
+                    enf = np.zeros(rows, bool)
+                    for b, sim in enumerate(chunk):
+                        enf[b] = sim.is_dynamic
+                except Exception as e:  # noqa: BLE001 — route to recovery
+                    # pack failed before the slot advanced: nothing was
+                    # submitted, the phase counter stays put, and the
+                    # chunk re-runs synchronously on scratch buffers
+                    stage_s += time.perf_counter() - t0
+                    _recover_chunk(bi, j, idxs, chunk, e)
+                    continue
                 staged_n[s] += 1
                 t1 = time.perf_counter()
                 stage_s += t1 - t0
@@ -1307,7 +1717,8 @@ class FleetRunner:
                     hidden_stage_s += t1 - t0
                 if inflight_total or any(p is not None for p in pending):
                     hideable_stage_s += t1 - t0
-                live = sum(b.nbytes for slot in self._campaign_bufs.values()
+                live = sum(b.nbytes
+                           for slot in self._campaign_bufs.values()
                            for b in slot.values())
                 peak_bytes = max(peak_bytes, live)
                 peak_rows = max(peak_rows,
@@ -1317,8 +1728,9 @@ class FleetRunner:
                 # next copy, then hand chunk j to the worker ---
                 if pending[s] is not None:
                     _dispatch(s)
-                fut = ex.submit(_h2d, (stacked, xf, enf), stream_sh[s])
-                pending[s] = (bi, idxs, chunk, fut)
+                fut = ex_holder[0].submit(_h2d, (stacked, xf, enf),
+                                          stream_sh[s], j)
+                pending[s] = (bi, j, idxs, chunk, fut)
             # --- pipeline drain: flush prefetched chunks, then collect ---
             for s in range(n_streams):
                 if pending[s] is not None:
@@ -1326,35 +1738,64 @@ class FleetRunner:
             for s in range(n_streams):
                 while inflight[s]:
                     _collect_oldest(s)
-        wall_s = time.perf_counter() - t_wall0
-
-        self.last_stats = {
-            "mode": "campaign",
-            "n_dispatches": len(jobs),
-            "n_chunks": len(jobs),
-            "n_buckets": len(plan),
-            "n_scenarios": len(sims),
-            "n_streams": n_streams,
-            "rows": cap_rows,
-            "chunk_rows": max(cap_rows),
-            "target_chunk_rows": target_rows,
-            "auto_chunk": auto_chunk,
-            "bucket_shapes": [dataclasses.astuple(s) for _, s in plan],
-            "policy": policy,
-            "peak_staged_rows": peak_rows,
-            "peak_staged_bytes": peak_bytes,
-            "stage_s": stage_s,
-            "dispatch_s": dispatch_s,
-            "transfer_s": transfer_s,
-            "transfer_wait_s": transfer_wait_s,
-            "block_s": block_s,
-            "wall_s": wall_s,
-            "overlap_fraction": (hidden_stage_s / hideable_stage_s
-                                 if hideable_stage_s > 0 else 1.0),
-            "transfer_overlap": (max(0.0, 1.0 - transfer_wait_s / transfer_s)
-                                 if transfer_s > 0 else 0.0),
-            "calibration": dataclasses.asdict(calib),
-        }
+            status = "ok"
+        except BaseException as e:
+            error_repr = repr(e)
+            raise
+        finally:
+            # teardown runs on success AND on any failure (including
+            # KeyboardInterrupt / injected aborts): cancel in-flight
+            # transfers, drop uncollected dispatches, and write
+            # failure-aware stats — a dead campaign must never leave the
+            # runner replaying the previous run's numbers or holding
+            # slots an abandoned transfer still aliases
+            for s in range(n_streams):
+                if pending[s] is not None:
+                    pending[s][4].cancel()
+                    pending[s] = None
+                inflight[s].clear()
+            ex_holder[0].shutdown(wait=(status == "ok"),
+                                  cancel_futures=True)
+            if status != "ok":
+                self._campaign_bufs.clear()
+            wall_s = time.perf_counter() - t_wall0
+            self.last_stats = {
+                "mode": "campaign",
+                "status": status,
+                "error": error_repr,
+                "n_dispatches": n_dispatched,
+                "n_chunks": len(jobs),
+                "n_chunks_done": chunks_done,
+                "n_chunks_resumed": n_resumed,
+                "n_retries": n_retries,
+                "n_recovered_chunks": n_recovered,
+                "n_quarantined": len({f.scenario for f in failures}),
+                "checkpoint": ckpt_dir,
+                "fingerprint": ckpt_fp,
+                "n_buckets": len(plan),
+                "n_scenarios": len(sims),
+                "n_streams": n_streams,
+                "rows": cap_rows,
+                "chunk_rows": max(cap_rows),
+                "target_chunk_rows": target_rows,
+                "auto_chunk": auto_chunk,
+                "bucket_shapes": [dataclasses.astuple(s) for _, s in plan],
+                "policy": policy,
+                "peak_staged_rows": peak_rows,
+                "peak_staged_bytes": peak_bytes,
+                "stage_s": stage_s,
+                "dispatch_s": dispatch_s,
+                "transfer_s": transfer_s,
+                "transfer_wait_s": transfer_wait_s,
+                "block_s": block_s,
+                "wall_s": wall_s,
+                "overlap_fraction": (hidden_stage_s / hideable_stage_s
+                                     if hideable_stage_s > 0 else 1.0),
+                "transfer_overlap": (
+                    max(0.0, 1.0 - transfer_wait_s / transfer_s)
+                    if transfer_s > 0 else 0.0),
+                "calibration": dataclasses.asdict(calib),
+            }
         return CampaignResult(
             metrics=metrics_all,
             tuples_per_mb=np.asarray([s.tuples_per_mb for s in sims],
@@ -1362,6 +1803,7 @@ class FleetRunner:
             dt=dt,
             policy=policy,
             results=results,  # type: ignore[arg-type]
+            failures=failures,
         )
 
     # ------------------------------------------------------ introspection

@@ -35,7 +35,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -170,6 +170,39 @@ class CompiledSim:
         return self.route_bank.shape[0] > 0
 
 
+def _validate_sim_inputs(where: str, *,
+                         finite_nonneg: Sequence[tuple[str, Any]] = (),
+                         nonneg_inf_ok: Sequence[tuple[str, Any]] = ()
+                         ) -> None:
+    """Reject poisoned scenario inputs at the compile boundary with an
+    error naming the offending field, instead of letting a NaN flow
+    silently through the whole scan and surface as a garbage metric row.
+
+    Two classes, because +inf is *load-bearing* in this codebase:
+    ``finite_nonneg`` fields (capacities, demands, event scales) must be
+    finite and ≥ 0; ``nonneg_inf_ok`` fields may be +inf — event times
+    use inf for "never" (schedule padding, permanent failures) and
+    ``proc_rate`` uses inf for "unbounded" (clamped at compile) — but NaN
+    and negative values are always poison."""
+    for field, a in finite_nonneg:
+        a = np.asarray(a, np.float64)
+        bad = ~np.isfinite(a) | (a < 0)
+        if bad.any():
+            i = int(np.flatnonzero(bad.ravel())[0])
+            raise ValueError(
+                f"{where}: {field} must be finite and non-negative; got "
+                f"{field}.ravel()[{i}] = {a.ravel()[i]}")
+    for field, a in nonneg_inf_ok:
+        a = np.asarray(a, np.float64)
+        bad = np.isnan(a) | (a < 0)
+        if bad.any():
+            i = int(np.flatnonzero(bad.ravel())[0])
+            raise ValueError(
+                f"{where}: {field} must be non-negative and not NaN "
+                f"(+inf is allowed); got "
+                f"{field}.ravel()[{i}] = {a.ravel()[i]}")
+
+
 def compile_sim(
     graph: InstanceGraph,
     topo: Topology,
@@ -244,6 +277,14 @@ def compile_sim(
         raise ValueError(
             f"schedule event links {ev_link} out of range for "
             f"{topo.n_links} links")
+    _validate_sim_inputs(
+        "compile_sim",
+        finite_nonneg=[("capacities", topo.capacities),
+                       ("gen_rate", graph.gen_rate),
+                       ("ev_scale", schedule.ev_scale)],
+        nonneg_inf_ok=[("proc_rate", graph.proc_rate),
+                       ("ev_t0", schedule.ev_t0),
+                       ("ev_t1", schedule.ev_t1)])
     F, L = len(flows), topo.n_links
     if reroute is True:
         reroute = RouteSchedule.from_events(topo, flows, schedule)
